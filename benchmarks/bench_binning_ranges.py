@@ -1,0 +1,76 @@
+"""Figs. 10/11 reproduction: binning-range selection sweep.
+
+The paper sweeps sym {1x, 1.2x, 1.5x} and num {1x, 1.5x, 2x, 3x} range
+multipliers and finds sym_1.2x / num_2x best on average — the collision-
+rate vs occupancy trade-off of §4.3.  We sweep the same grid and report
+the exact per-row table-transaction counts (collision probes included)
+from the instrumented Pallas kernels, plus the implied mean occupancy of
+the chosen tables.  Fewer transactions at higher multiplier = the paper's
+collision effect; larger tables at higher multiplier = its occupancy cost
+(on GPU: fewer resident blocks; on TPU: more VMEM per core).
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import numpy as np
+
+from repro.core import (NUMERIC_SWEEP, SYMBOLIC_SWEEP, bin_rows_for_ladder,
+                        esc, next_bucket, nprod_into_rpt, numeric_ladder,
+                        random_csr, symbolic_ladder)
+from repro.core.analysis import exclusive_sum_in_place
+from repro.kernels import spgemm_hash
+
+
+def _occupancy(binning, ladder, sizes):
+    """Mean fill fraction of the hash tables actually used."""
+    sizes = np.asarray(sizes)
+    bin_of = np.asarray(binning.bin_of_row)
+    occ = []
+    for b, t in enumerate(ladder.table_sizes):
+        members = sizes[bin_of == b]
+        if len(members):
+            occ.append(members.mean() / t)
+    return float(np.mean(occ)) if occ else 0.0
+
+
+def run() -> List[str]:
+    rows = []
+    A = random_csr(jax.random.PRNGKey(5), 256, 1024, avg_nnz_per_row=10.0,
+                   distribution="powerlaw")
+    B = random_csr(jax.random.PRNGKey(6), 1024, 512, avg_nnz_per_row=8.0,
+                   distribution="powerlaw")
+    m = A.nrows
+    nprod = nprod_into_rpt(A, B)[:m]
+
+    for mult in SYMBOLIC_SWEEP:
+        lad = symbolic_ladder(mult)
+        bn = bin_rows_for_ladder(nprod, lad)
+        _, acc = spgemm_hash.symbolic_binned(
+            A, B, bn, lad, prod_capacity=1, single_access=True,
+            collect_accesses=True)
+        rows.append(
+            f"bench_binning_ranges/sym_{mult}x,{int(acc)},"
+            f"accesses={int(acc)};occupancy={_occupancy(bn, lad, nprod):.3f}")
+        print(rows[-1], flush=True)
+
+    nnz_buf = esc.symbolic(A, B, prod_capacity=next_bucket(int(nprod.sum())))
+    rpt = exclusive_sum_in_place(nnz_buf)
+    cap = next_bucket(int(rpt[-1]))
+    for mult in NUMERIC_SWEEP:
+        lad = numeric_ladder(mult)
+        bn = bin_rows_for_ladder(nnz_buf[:m], lad)
+        _, acc = spgemm_hash.numeric_binned(
+            A, B, rpt, bn, lad, prod_capacity=1, nnz_capacity=cap,
+            single_access=True, collect_accesses=True)
+        rows.append(
+            f"bench_binning_ranges/num_{mult}x,{int(acc)},"
+            f"accesses={int(acc)};"
+            f"occupancy={_occupancy(bn, lad, nnz_buf[:m]):.3f}")
+        print(rows[-1], flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

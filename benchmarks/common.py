@@ -1,0 +1,28 @@
+"""Benchmark timing discipline (paper §6): 1 warmup + N timed reps, mean."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+REPS = 3          # the paper uses 10; CPU wall-times here are seconds-scale
+
+
+def timeit(fn: Callable, *args, reps: int = REPS, **kw) -> float:
+    """Mean seconds per call: one warmup, then ``reps`` timed runs."""
+    jax.block_until_ready(fn(*args, **kw))       # warmup (compile)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def gflops(nprod: int, seconds: float) -> float:
+    """Paper's metric: 2*n_prod / time."""
+    return 2.0 * nprod / seconds / 1e9
+
+
+def csv_row(name: str, us_per_call: float, derived: str = "") -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,45 @@
+"""Benchmark harness entry: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (see each module's docstring
+for the paper artifact it reproduces).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="run a single bench module (e.g. 'overall')")
+    args = ap.parse_args()
+
+    from . import (bench_binning, bench_binning_ranges, bench_hashing,
+                   bench_moe_dispatch, bench_overall, bench_overlap)
+
+    benches = {
+        "overall": bench_overall.run,            # Fig 5/6
+        "binning": bench_binning.run,            # Fig 7/8
+        "hashing": bench_hashing.run,            # Fig 9
+        "binning_ranges": bench_binning_ranges.run,  # Fig 10/11
+        "overlap": bench_overlap.run,            # §6.3.4/6.3.5
+        "moe_dispatch": bench_moe_dispatch.run,  # beyond-paper
+    }
+    if args.only:
+        benches = {args.only: benches[args.only]}
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in benches.items():
+        try:
+            fn()
+        except Exception as e:                   # pragma: no cover
+            failures += 1
+            print(f"{name},FAILED,{type(e).__name__}: {e}", file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

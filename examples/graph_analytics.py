@@ -1,0 +1,38 @@
+"""SpGEMM application: multi-source BFS frontier expansion via A @ F.
+
+The paper motivates SpGEMM with graph workloads (multi-source BFS, Markov
+clustering).  Frontier expansion for many sources at once IS a sparse-
+sparse product: adjacency (N x N) @ frontier (N x S).
+
+Run:  PYTHONPATH=src python examples/graph_analytics.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CSR, SpgemmConfig, spgemm, random_csr
+
+N, SOURCES, HOPS = 3000, 32, 4
+adj = random_csr(jax.random.PRNGKey(0), N, N, avg_nnz_per_row=6.0,
+                 distribution="powerlaw")
+
+# one-hot frontier per source column
+rng = np.random.default_rng(0)
+srcs = rng.choice(N, SOURCES, replace=False)
+dense_f = np.zeros((N, SOURCES), np.float32)
+dense_f[srcs, np.arange(SOURCES)] = 1.0
+frontier = CSR.from_dense(dense_f)
+
+visited = dense_f > 0
+for hop in range(HOPS):
+    res = spgemm(adj, frontier, SpgemmConfig(method="esc"))
+    reached = np.asarray(res.C.to_dense()) > 0
+    new = reached & ~visited
+    visited |= reached
+    frontier = CSR.from_dense(new.astype(np.float32))
+    print(f"hop {hop + 1}: frontier nnz={int(frontier.nnz())}, "
+          f"visited={int(visited.sum())}/{N * SOURCES} pairs, "
+          f"CR={res.compression_ratio:.2f}")
+
+print("multi-source BFS done —", int(visited.any(axis=1).sum()),
+      "nodes reached from", SOURCES, "sources")

@@ -1,0 +1,25 @@
+"""OpSparse core: two-phase, binned, row-wise SpGEMM in JAX.
+
+Public API:
+  CSR, random_csr            — sparse container + synthetic generator
+  spgemm, SpgemmConfig       — the paper's two-phase pipeline (Fig. 2)
+  bin_rows_for_ladder        — two-pass binning (§5.1, also the MoE router)
+  symbolic_ladder/numeric_ladder — bin ladders + range selection (§5.7)
+"""
+from .csr import CSR, random_csr
+from .binning import Binning, bin_rows, bin_rows_for_ladder, bin_rows_identity, classify
+from .binning_ranges import (BinLadder, make_ladder, numeric_ladder,
+                             symbolic_ladder, SYMBOLIC_SWEEP, NUMERIC_SWEEP)
+from .analysis import (compression_ratio, exclusive_sum_in_place,
+                       nprod_into_rpt, nprod_per_entry, total_nprod)
+from .spgemm import SpgemmConfig, SpgemmResult, next_bucket, spgemm, spgemm_reference
+from . import esc
+
+__all__ = [
+    "CSR", "random_csr", "Binning", "bin_rows", "bin_rows_for_ladder",
+    "bin_rows_identity", "classify", "BinLadder", "make_ladder",
+    "numeric_ladder", "symbolic_ladder", "SYMBOLIC_SWEEP", "NUMERIC_SWEEP",
+    "compression_ratio", "exclusive_sum_in_place", "nprod_into_rpt",
+    "nprod_per_entry", "total_nprod", "SpgemmConfig", "SpgemmResult",
+    "next_bucket", "spgemm", "spgemm_reference", "esc",
+]

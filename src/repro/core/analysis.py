@@ -1,0 +1,53 @@
+"""Setup-step analysis (OpSparse Fig. 2 step 1): n_prod per row, CR.
+
+The paper computes ``n_prod`` per output row in the setup step and stores
+it in the (reused) ``C.rpt`` array (§5.3).  ``n_prod[i] = sum_k |B_{k*}|``
+over the column ids k of A's row i — a gather + segment-sum, no multiply.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .csr import CSR
+
+
+@jax.jit
+def nprod_per_entry(A: CSR, B: CSR) -> jax.Array:
+    """(capA,) int32 — |B row| for each stored entry of A (0 for padding)."""
+    b_sizes = B.nnz_per_row()
+    safe_col = jnp.minimum(A.col, B.nrows - 1)
+    return jnp.where(A.entry_mask(), b_sizes[safe_col], 0).astype(jnp.int32)
+
+
+@jax.jit
+def nprod_into_rpt(A: CSR, B: CSR) -> jax.Array:
+    """(M+1,) int32 buffer with ``[0:M] = n_prod per row`` and ``[M] = 0``.
+
+    This IS the metadata-minimization trick of §5.3: the n_prod (and later
+    n_nz) vectors live inside the storage that will become ``C.rpt``; the
+    exclusive-sum that turns n_nz into row pointers runs in place.
+    """
+    per_entry = nprod_per_entry(A, B)
+    rows = A.row_ids()  # padding rows -> M, dropped by the scatter
+    buf = jnp.zeros(A.nrows + 1, dtype=jnp.int32)
+    return buf.at[rows].add(per_entry, mode="drop")
+
+
+@jax.jit
+def total_nprod(A: CSR, B: CSR) -> jax.Array:
+    return jnp.sum(nprod_per_entry(A, B))
+
+
+def compression_ratio(A: CSR, B: CSR, C: CSR) -> float:
+    """Paper Eq. (3): total n_prod / nnz(C)."""
+    npd = int(total_nprod(A, B))
+    nnz = int(C.nnz())
+    return npd / max(nnz, 1)
+
+
+def exclusive_sum_in_place(buf: jax.Array) -> jax.Array:
+    """(M+1,) counts-buffer -> row pointers, in place (cub ExclusiveSum
+    analog; XLA reuses the donated buffer)."""
+    return jnp.concatenate(
+        [jnp.zeros(1, buf.dtype), jnp.cumsum(buf[:-1]).astype(buf.dtype)])

@@ -1,0 +1,157 @@
+"""Two-pass binning (OpSparse §5.1, Algorithms 1–3) — global load balance.
+
+The paper classifies rows by size (n_prod or n_nz) into bins, storing ALL
+classified row ids in ONE length-M ``bins`` array plus tiny ``bin_size`` /
+``bin_offset`` arrays — the minimum-metadata layout of Fig. 3.  Its GPU
+implementation accumulates bin counts in shared memory (Alg 1), computes
+offsets by exclusive-sum, then scatters row ids with shared-memory-staged
+atomics (Alg 2), with a fast path (Alg 3) that emits the identity
+permutation when every row fits the smallest bin.
+
+TPU/JAX adaptation (DESIGN.md §2): pass 1 is a vectorized histogram (the
+VMEM-staged Pallas variant lives in ``kernels/binning_pallas.py``); pass 2
+is a stable counting-sort scatter — ``argsort(bin_of_row, stable)`` IS
+"write row ids to their bin's slice" and preserves the paper's in-bin
+row-id order.  The Alg-3 fast path is kept: when ``max(sizes) <= upper[0]``
+the ``bins`` array is the identity and pass 2 is skipped (the orchestrator
+checks the device-computed max on the host, exactly where the paper's
+kernel-launch decision happens).
+
+This module is ALSO the MoE token-router (models/moe.py): routing T tokens
+to E experts is the same two-pass problem with sizes:=expert_id histograms.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .binning_ranges import BinLadder
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class Binning:
+    """Result of the two-pass binning — the paper's Fig. 3 metadata.
+
+    bins:       (M,) int32 — row ids grouped by bin (one array, min metadata).
+    bin_size:   (NUM_BIN,) int32.
+    bin_offset: (NUM_BIN,) int32 exclusive-sum of bin_size.
+    bin_of_row: (M,) int32 — which bin each row landed in.
+    max_size:   () int32 — max row size (Alg 1 line 6/19's d_max_row_nnz).
+    """
+
+    bins: jax.Array
+    bin_size: jax.Array
+    bin_offset: jax.Array
+    bin_of_row: jax.Array
+    max_size: jax.Array
+
+    def tree_flatten(self):
+        return (self.bins, self.bin_size, self.bin_offset,
+                self.bin_of_row, self.max_size), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def num_bins(self) -> int:
+        return int(self.bin_size.shape[0])
+
+    def rows_of_bin(self, b: int, capacity: int) -> Tuple[jax.Array, jax.Array]:
+        """Row ids of bin ``b`` padded to static ``capacity``; returns
+        (row_ids, count).  Padded slots hold row id 0 (callers mask)."""
+        start = self.bin_offset[b]
+        idx = start + jnp.arange(capacity, dtype=jnp.int32)
+        valid = jnp.arange(capacity, dtype=jnp.int32) < self.bin_size[b]
+        safe = jnp.where(valid, jnp.minimum(idx, self.bins.shape[0] - 1), 0)
+        return jnp.where(valid, self.bins[safe], 0), self.bin_size[b]
+
+
+def classify(sizes: jax.Array, upper: Tuple[int, ...]) -> jax.Array:
+    """Bin index per row: first rung whose upper bound admits the size.
+
+    ``searchsorted`` over the (sorted) rung bounds == the paper's Alg-1
+    linear scan over ``r_range`` (the scan exits at the first admitting
+    rung; searchsorted finds the same rung without the serial loop).
+    Sizes above the last bound land in the fallback rung ``len(upper)``.
+    """
+    bounds = jnp.asarray(upper, dtype=sizes.dtype)
+    return jnp.searchsorted(bounds, sizes, side="left").astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("upper", "num_bins"))
+def bin_rows(sizes: jax.Array, *, upper: Tuple[int, ...],
+             num_bins: int) -> Binning:
+    """Both passes, fused.  ``sizes`` is n_prod (symbolic) or n_nz (numeric).
+
+    Pass 1 (Alg 1): histogram of bin ids -> bin_size; max of sizes.
+    Offsets: exclusive-sum (the paper uses cub::DeviceScan; here cumsum).
+    Pass 2 (Alg 2): stable counting-sort scatter of row ids.
+    """
+    m = sizes.shape[0]
+    bin_of_row = classify(sizes, upper)
+    bin_size = jnp.zeros(num_bins, dtype=jnp.int32).at[bin_of_row].add(1)
+    bin_offset = jnp.concatenate(
+        [jnp.zeros(1, jnp.int32), jnp.cumsum(bin_size)[:-1].astype(jnp.int32)])
+    max_size = jnp.max(sizes) if m else jnp.zeros((), sizes.dtype)
+    # Stable sort by bin id groups row ids per bin in-order — one length-M
+    # array of metadata, the paper's Fig. 3 layout.
+    bins = jnp.argsort(bin_of_row, stable=True).astype(jnp.int32)
+    return Binning(bins=bins, bin_size=bin_size, bin_offset=bin_offset,
+                   bin_of_row=bin_of_row, max_size=max_size)
+
+
+@partial(jax.jit, static_argnames=("num_bins",))
+def bin_rows_identity(sizes: jax.Array, num_bins: int) -> Binning:
+    """Alg 3 fast path: every row fits bin 0 -> bins is the identity."""
+    m = sizes.shape[0]
+    bin_size = jnp.zeros(num_bins, jnp.int32).at[0].set(m)
+    bin_offset = jnp.concatenate(
+        [jnp.zeros(1, jnp.int32),
+         jnp.full((num_bins - 1,), m, jnp.int32)])
+    return Binning(
+        bins=jnp.arange(m, dtype=jnp.int32),
+        bin_size=bin_size,
+        bin_offset=bin_offset,
+        bin_of_row=jnp.zeros(m, jnp.int32),
+        max_size=jnp.max(sizes) if m else jnp.zeros((), sizes.dtype),
+    )
+
+
+@partial(jax.jit, static_argnames=("num_bins",))
+def bin_by_id(ids: jax.Array, num_bins: int):
+    """Two-pass binning where the bin of each item IS its id.
+
+    This is the MoE token-router (models/moe.py): routing T·k assignments
+    to E experts is the paper's binning problem with ``bin_of_row := ids``:
+    pass 1 histogram -> per-expert counts, exclusive-sum -> offsets, pass 2
+    stable counting-sort scatter -> assignments grouped by expert in ONE
+    length-(T·k) array (the paper's minimum-metadata bins layout).
+
+    Returns (order, counts, offsets).
+    """
+    counts = jnp.zeros(num_bins, jnp.int32).at[ids].add(1)
+    offsets = jnp.concatenate(
+        [jnp.zeros(1, jnp.int32), jnp.cumsum(counts)[:-1].astype(jnp.int32)])
+    order = jnp.argsort(ids, stable=True).astype(jnp.int32)
+    return order, counts, offsets
+
+
+def bin_rows_for_ladder(sizes: jax.Array, ladder: BinLadder,
+                        *, allow_fast_path: bool = True) -> Binning:
+    """Orchestrator entry: host-checks the Alg-3 fast path, then bins.
+
+    The host sync on ``max(sizes)`` mirrors the paper: the binning kernel
+    writes d_max_row_nnz, and the HOST decides which second-pass kernel to
+    launch.  Under jit tracing (no concrete values) we skip the fast path.
+    """
+    if allow_fast_path and not isinstance(sizes, jax.core.Tracer):
+        max_size = int(jnp.max(sizes)) if sizes.shape[0] else 0
+        if max_size <= ladder.upper[0]:
+            return bin_rows_identity(sizes, num_bins=ladder.num_bins)
+    return bin_rows(sizes, upper=ladder.upper, num_bins=ladder.num_bins)

@@ -1,0 +1,216 @@
+"""CSR sparse-matrix container (JAX pytree).
+
+The paper (OpSparse §2.1.1) uses CSR for A, B and C.  JAX requires static
+array shapes, so the ``col``/``val`` arrays may be *padded* beyond the true
+number of nonzeros; the authoritative nnz is ``rpt[-1]`` (device value).
+Padded ``col`` entries are 0 and padded ``val`` entries are 0 so that any
+masked consumer that forgets the mask still gathers in-bounds.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class CSR:
+    """Compressed-sparse-row matrix.
+
+    Attributes:
+      rpt:   (M+1,) int32 row pointers.  ``rpt[-1]`` is the true nnz.
+      col:   (cap,) int32 column indices, ``cap >= nnz`` (padded with 0).
+      val:   (cap,) values, same cap (padded with 0).
+      shape: static (M, N).
+    """
+
+    rpt: jax.Array
+    col: jax.Array
+    val: jax.Array
+    shape: Tuple[int, int]
+
+    # -- pytree protocol ---------------------------------------------------
+    def tree_flatten(self):
+        return (self.rpt, self.col, self.val), self.shape
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        rpt, col, val = children
+        return cls(rpt=rpt, col=col, val=val, shape=aux)
+
+    # -- properties --------------------------------------------------------
+    @property
+    def nrows(self) -> int:
+        return self.shape[0]
+
+    @property
+    def ncols(self) -> int:
+        return self.shape[1]
+
+    @property
+    def capacity(self) -> int:
+        """Static storage capacity (>= true nnz)."""
+        return int(self.col.shape[0])
+
+    def nnz(self) -> jax.Array:
+        """True number of nonzeros (device scalar)."""
+        return self.rpt[-1]
+
+    def nnz_per_row(self) -> jax.Array:
+        """(M,) int32 row sizes — what the paper calls n_nz per row."""
+        return self.rpt[1:] - self.rpt[:-1]
+
+    def entry_mask(self) -> jax.Array:
+        """(cap,) bool — True for real entries, False for padding."""
+        return jnp.arange(self.capacity, dtype=jnp.int32) < self.nnz()
+
+    def row_ids(self) -> jax.Array:
+        """(cap,) int32 — row index of every stored entry (M for padding).
+
+        Vectorized CSR->COO expansion: ``searchsorted`` on the row pointers.
+        """
+        idx = jnp.arange(self.capacity, dtype=jnp.int32)
+        rows = jnp.searchsorted(self.rpt, idx, side="right").astype(jnp.int32) - 1
+        return jnp.where(self.entry_mask(), rows, self.nrows)
+
+    # -- conversions (test / host utilities) -------------------------------
+    @classmethod
+    def from_dense(cls, dense, *, index_dtype=jnp.int32) -> "CSR":
+        """Build an exact (unpadded) CSR from a dense matrix.  Host-side."""
+        dense = np.asarray(dense)
+        m, n = dense.shape
+        rows, cols = np.nonzero(dense)
+        order = np.lexsort((cols, rows))
+        rows, cols = rows[order], cols[order]
+        vals = dense[rows, cols]
+        rpt = np.zeros(m + 1, dtype=np.int32)
+        np.add.at(rpt, rows + 1, 1)
+        rpt = np.cumsum(rpt).astype(np.int32)
+        if len(cols) == 0:      # keep capacity >= 1 (zero-size gathers)
+            cols = np.zeros(1, np.int32)
+            vals = np.zeros(1, dense.dtype)
+        return cls(
+            rpt=jnp.asarray(rpt, dtype=index_dtype),
+            col=jnp.asarray(cols, dtype=index_dtype),
+            val=jnp.asarray(vals, dtype=dense.dtype),
+            shape=(m, n),
+        )
+
+    @classmethod
+    def from_parts(cls, rpt, col, val, shape) -> "CSR":
+        return cls(
+            rpt=jnp.asarray(rpt, dtype=jnp.int32),
+            col=jnp.asarray(col, dtype=jnp.int32),
+            val=jnp.asarray(val),
+            shape=tuple(int(s) for s in shape),
+        )
+
+    def to_dense(self) -> jax.Array:
+        """Dense (M, N) matrix.  For tests / oracles only."""
+        m, n = self.shape
+        rows = self.row_ids()
+        mask = self.entry_mask()
+        flat = jnp.zeros((m + 1) * n, dtype=self.val.dtype)
+        lin = jnp.where(mask, rows * n + self.col, m * n)
+        flat = flat.at[lin].add(jnp.where(mask, self.val, 0))
+        return flat[: m * n].reshape(m, n)
+
+    def with_capacity(self, cap: int) -> "CSR":
+        """Pad / truncate storage to a new static capacity."""
+        cur = self.capacity
+        if cap == cur:
+            return self
+        if cap > cur:
+            col = jnp.zeros(cap, dtype=self.col.dtype).at[:cur].set(self.col)
+            val = jnp.zeros(cap, dtype=self.val.dtype).at[:cur].set(self.val)
+        else:
+            col, val = self.col[:cap], self.val[:cap]
+        return CSR(rpt=self.rpt, col=col, val=val, shape=self.shape)
+
+    def block_until_ready(self) -> "CSR":
+        jax.block_until_ready((self.rpt, self.col, self.val))
+        return self
+
+
+@partial(jax.jit, static_argnames=("nnz_capacity",))
+def gather_rows(A: "CSR", rows: jax.Array, valid: jax.Array,
+                nnz_capacity: int | None = None) -> "CSR":
+    """Extract a sub-CSR of the given rows (padded row slots allowed).
+
+    Used by the global-memory-analog fallback rung: rows too large for the
+    top VMEM hash table are gathered and handed to the ESC accumulator.
+    ``rows`` may contain out-of-range ids where ``valid`` is False.
+    """
+    r_cap = rows.shape[0]
+    cap = int(nnz_capacity) if nnz_capacity is not None else A.capacity
+    safe_rows = jnp.clip(rows, 0, A.nrows - 1)
+    sizes = jnp.where(valid, A.nnz_per_row()[safe_rows], 0).astype(jnp.int32)
+    rpt_sub = jnp.concatenate(
+        [jnp.zeros(1, jnp.int32), jnp.cumsum(sizes).astype(jnp.int32)])
+    t = jnp.arange(cap, dtype=jnp.int32)
+    sr = jnp.searchsorted(rpt_sub[:-1], t, side="right").astype(jnp.int32) - 1
+    sr = jnp.clip(sr, 0, r_cap - 1)
+    off = t - rpt_sub[sr]
+    src = jnp.minimum(A.rpt[safe_rows[sr]] + off, max(A.capacity - 1, 0))
+    t_valid = t < rpt_sub[-1]
+    col = jnp.where(t_valid, A.col[src], 0)
+    val = jnp.where(t_valid, A.val[src], 0)
+    return CSR(rpt=rpt_sub, col=col, val=val, shape=(r_cap, A.ncols))
+
+
+def random_csr(key, m: int, n: int, *, avg_nnz_per_row: float,
+               max_nnz_per_row: int | None = None,
+               dtype=jnp.float32, distribution: str = "uniform") -> CSR:
+    """Synthetic sparse matrix generator (host-side, numpy RNG).
+
+    ``distribution``:
+      - "uniform":每 row size ~ Poisson(avg) clipped to [0, max].
+      - "powerlaw": heavy-tailed row sizes (a few very large rows) — models
+        matrices like webbase-1M with max_nnz/row >> mean.
+      - "banded": FEM-like band structure (rows hit nearby columns) — models
+        cant/consph/pwtk style matrices with high compression ratios.
+    """
+    seed = int(jax.random.bits(key, dtype=jnp.uint32)) if hasattr(key, "dtype") else int(key)
+    rng = np.random.default_rng(seed)
+    max_r = max_nnz_per_row or max(1, int(avg_nnz_per_row * 8))
+    max_r = min(max_r, n)
+    if distribution == "uniform":
+        sizes = rng.poisson(avg_nnz_per_row, size=m)
+    elif distribution == "powerlaw":
+        sizes = np.minimum((rng.pareto(1.5, size=m) + 1.0) * avg_nnz_per_row * 0.5, max_r)
+    elif distribution == "banded":
+        sizes = rng.normal(avg_nnz_per_row, avg_nnz_per_row * 0.15, size=m)
+    else:
+        raise ValueError(f"unknown distribution {distribution!r}")
+    sizes = np.clip(sizes.astype(np.int64), 0, max_r)
+
+    cols_list = []
+    for i in range(m):
+        s = int(sizes[i])
+        if s == 0:
+            cols_list.append(np.empty(0, dtype=np.int32))
+            continue
+        if distribution == "banded":
+            center = int(i * n / max(m, 1))
+            lo = max(0, center - 2 * s)
+            hi = min(n, lo + 4 * s + 1)
+            cand = rng.choice(hi - lo, size=min(s, hi - lo), replace=False) + lo
+        else:
+            cand = rng.choice(n, size=s, replace=False)
+        cols_list.append(np.sort(cand).astype(np.int32))
+    sizes = np.array([len(c) for c in cols_list], dtype=np.int32)
+    rpt = np.concatenate([[0], np.cumsum(sizes)]).astype(np.int32)
+    cap = max(int(rpt[-1]), 1)     # capacity >= 1 (zero-size gathers)
+    col = np.zeros(cap, np.int32)
+    if rpt[-1]:
+        col[:rpt[-1]] = np.concatenate(cols_list).astype(np.int32)
+    val = np.zeros(cap, np.dtype(dtype).name if dtype != jnp.bfloat16
+                   else np.float32)
+    val[:rpt[-1]] = rng.standard_normal(int(rpt[-1]))
+    return CSR(rpt=jnp.asarray(rpt), col=jnp.asarray(col),
+               val=jnp.asarray(val, dtype=dtype), shape=(m, n))

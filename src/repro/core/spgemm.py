@@ -1,0 +1,164 @@
+"""The OpSparse two-phase SpGEMM orchestrator (paper Fig. 2).
+
+Six steps, faithful to the paper's flow:
+
+  step1 SETUP      n_prod per row, written into the C.rpt storage (§5.3);
+                   workspace planned (ONE fused metadata buffer).
+  step2 SYM-BIN    binning on n_prod (sym ladder, default 1.2x ranges).
+  step3 SYMBOLIC   n_nz per row via per-bin hash kernels (Pallas) or the
+                   ESC accumulator; result overwrites the same rpt buffer.
+  step4 ALLOC      total n_nz -> host; rpt = in-place exclusive-sum; C.col
+                   / C.val capacity chosen (pow-2 bucket: the static-shape
+                   analog of cudaMalloc, bucketing bounds recompiles).
+  step5 NUM-BIN    binning on n_nz (num ladder, default 2x ranges).
+  step6 NUMERIC    fill C.col/C.val, rows sorted by column.
+
+Host/device overlap (§5.4–§5.5 adaptation): every step is dispatched
+asynchronously; the only host syncs are the two the paper itself has (the
+total-n_prod / total-n_nz reads that size the next launch), plus the Alg-3
+fast-path check.  Between dispatch and sync the host plans buckets and
+workspaces — the analog of overlapping cudaMalloc with kernel execution.
+Large-row fallback rows (beyond the top hash rung) are computed with the
+ESC accumulator — the analog of the paper's global-memory hash kernels.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import esc
+from .analysis import nprod_into_rpt, exclusive_sum_in_place
+from .binning import Binning, bin_rows_for_ladder
+from .binning_ranges import BinLadder, numeric_ladder, symbolic_ladder
+from .csr import CSR
+
+
+@dataclasses.dataclass(frozen=True)
+class SpgemmConfig:
+    method: str = "esc"              # "esc" | "hash"
+    sym_multiplier: float = 1.2      # paper's sym_1.2x
+    num_multiplier: float = 2.0      # paper's num_2x
+    vmem_extended: bool = False      # TPU ladder extension (DESIGN.md §5)
+    hash_single_access: bool = True  # §5.2 single-access vs multi-access
+    fuse_esc: bool = False           # beyond-paper single-expansion ESC
+    interpret: bool = True           # Pallas interpret mode (CPU container)
+    timing: bool = False             # per-step wall-clock (benchmarks)
+
+    def ladders(self) -> tuple[BinLadder, BinLadder]:
+        return (symbolic_ladder(self.sym_multiplier, vmem_extended=self.vmem_extended),
+                numeric_ladder(self.num_multiplier, vmem_extended=self.vmem_extended))
+
+
+@dataclasses.dataclass
+class SpgemmResult:
+    C: CSR
+    total_nprod: int
+    total_nnz: int
+    sym_binning: Optional[Binning]
+    num_binning: Optional[Binning]
+    timings: Dict[str, float]
+
+    @property
+    def compression_ratio(self) -> float:
+        return self.total_nprod / max(self.total_nnz, 1)
+
+
+def next_bucket(n: int, *, minimum: int = 16) -> int:
+    """Pow-2 shape bucket — bounds both padding waste (<2x) and the number
+    of distinct compiled executables (the recompile<->cudaMalloc analog)."""
+    b = minimum
+    while b < n:
+        b <<= 1
+    return b
+
+
+_exclusive_sum = jax.jit(exclusive_sum_in_place, donate_argnums=0)
+
+
+class _StepTimer:
+    def __init__(self, enabled: bool):
+        self.enabled = enabled
+        self.timings: Dict[str, float] = {}
+
+    def measure(self, name: str, value):
+        """Block on `value` and charge the elapsed time to `name`."""
+        if self.enabled:
+            t0 = time.perf_counter()
+            jax.block_until_ready(value)
+            self.timings[name] = self.timings.get(name, 0.0) + (
+                time.perf_counter() - t0)
+        return value
+
+
+def spgemm(A: CSR, B: CSR, config: SpgemmConfig = SpgemmConfig()) -> SpgemmResult:
+    """C = A · B in CSR, two-phase, binned, statically bucketed."""
+    assert A.ncols == B.nrows, (A.shape, B.shape)
+    m = A.nrows
+    sym_ladder, num_ladder = config.ladders()
+    timer = _StepTimer(config.timing)
+
+    # ---- step1: setup -----------------------------------------------------
+    rpt_buf = nprod_into_rpt(A, B)               # n_prod lives in C.rpt (§5.3)
+    timer.measure("setup", rpt_buf)
+    nprod = rpt_buf[:m]
+    total_nprod = int(jnp.sum(nprod))            # host sync #1 (sizes launches)
+
+    # ---- step2: symbolic binning -------------------------------------------
+    sym_binning = bin_rows_for_ladder(nprod, sym_ladder)
+    timer.measure("symbolic_binning", sym_binning.bins)
+
+    prod_capacity = next_bucket(max(total_nprod, 1))
+
+    # ---- step3: symbolic ----------------------------------------------------
+    if config.method == "hash":
+        from repro.kernels import spgemm_hash
+        nnz_buf = spgemm_hash.symbolic_binned(
+            A, B, sym_binning, sym_ladder,
+            prod_capacity=prod_capacity,
+            single_access=config.hash_single_access,
+            interpret=config.interpret)
+    else:
+        nnz_buf = esc.symbolic(A, B, prod_capacity=prod_capacity)
+    timer.measure("symbolic", nnz_buf)
+
+    # ---- step4: alloc -------------------------------------------------------
+    nnz = nnz_buf[:m]
+    # Numeric binning is dispatched BEFORE the host reads total_nnz: the
+    # launch-early / allocate-later ordering of §5.4.
+    num_binning = bin_rows_for_ladder(nnz, num_ladder)
+    total_nnz = int(jnp.sum(nnz))                # host sync #2 (alloc C)
+    nnz_capacity = next_bucket(max(total_nnz, 1))
+    rpt = _exclusive_sum(nnz_buf)                # in-place on the rpt buffer
+    timer.measure("alloc", rpt)
+    timer.measure("numeric_binning", num_binning.bins)
+
+    # ---- step6: numeric -----------------------------------------------------
+    if config.method == "hash":
+        from repro.kernels import spgemm_hash
+        C = spgemm_hash.numeric_binned(
+            A, B, rpt, num_binning, num_ladder,
+            prod_capacity=prod_capacity, nnz_capacity=nnz_capacity,
+            single_access=config.hash_single_access,
+            interpret=config.interpret)
+    elif config.fuse_esc:
+        C = esc.spgemm_fused(A, B, prod_capacity=prod_capacity,
+                             nnz_capacity=nnz_capacity)
+    else:
+        C = esc.numeric(A, B, rpt, prod_capacity=prod_capacity,
+                        nnz_capacity=nnz_capacity)
+    timer.measure("numeric", C.val)
+
+    return SpgemmResult(
+        C=C, total_nprod=total_nprod, total_nnz=total_nnz,
+        sym_binning=sym_binning, num_binning=num_binning,
+        timings=timer.timings)
+
+
+def spgemm_reference(A: CSR, B: CSR) -> jax.Array:
+    """Dense oracle (tests): to_dense(A) @ to_dense(B)."""
+    return A.to_dense() @ B.to_dense()

@@ -1,0 +1,83 @@
+"""Fused metadata workspace (OpSparse §5.3–§5.4 adaptation).
+
+The paper's metadata (the ``bins`` array, ``bin_size``, ``bin_offset``, the
+max-row-size cell) is summed up and allocated with ONE ``cudaMalloc``; the
+``n_prod``/``n_nz`` vectors reuse the ``C.rpt`` allocation.  The JAX analog
+of repeated ``cudaMalloc`` cost is repeated *buffer allocation + executable
+re-specialization*: we carve all binning metadata out of one flat int32
+buffer whose shape depends only on (M, NUM_BIN), and **donate** it between
+the symbolic and numeric binning calls so XLA reuses the same HBM block.
+
+Layout (int32 cells):   [ bins : M | bin_size : NB | bin_offset : NB | max : 1 ]
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .binning import Binning, classify
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkspacePlan:
+    m: int
+    num_bins: int
+
+    @property
+    def size(self) -> int:
+        return self.m + 2 * self.num_bins + 1
+
+    def alloc(self) -> jax.Array:
+        """The single fused allocation."""
+        return jnp.zeros(self.size, dtype=jnp.int32)
+
+    def views(self, buf: jax.Array) -> Binning:
+        m, nb = self.m, self.num_bins
+        return Binning(
+            bins=buf[:m],
+            bin_size=buf[m:m + nb],
+            bin_offset=buf[m + nb:m + 2 * nb],
+            bin_of_row=classify_placeholder(m),
+            max_size=buf[m + 2 * nb],
+        )
+
+
+def classify_placeholder(m: int) -> jax.Array:
+    return jnp.zeros(m, dtype=jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("upper", "num_bins", "m"),
+         donate_argnums=(1,))
+def bin_rows_into(sizes: jax.Array, buf: jax.Array, *,
+                  upper: Tuple[int, ...], num_bins: int, m: int) -> jax.Array:
+    """Two-pass binning writing ALL metadata into the donated fused buffer.
+
+    Same math as ``binning.bin_rows`` but the outputs land in one buffer:
+    XLA reuses the donated HBM block across the symbolic/numeric binning
+    steps — the single-allocation discipline of §5.3.
+    """
+    bin_of_row = classify(sizes, upper)
+    bin_size = jnp.zeros(num_bins, jnp.int32).at[bin_of_row].add(1)
+    bin_offset = jnp.concatenate(
+        [jnp.zeros(1, jnp.int32), jnp.cumsum(bin_size)[:-1].astype(jnp.int32)])
+    bins = jnp.argsort(bin_of_row, stable=True).astype(jnp.int32)
+    max_size = (jnp.max(sizes) if m else jnp.zeros((), sizes.dtype)).astype(jnp.int32)
+    out = jnp.concatenate(
+        [bins, bin_size, bin_offset, max_size[None]])
+    return out
+
+
+def binning_from_buffer(buf: jax.Array, sizes: jax.Array,
+                        plan: WorkspacePlan, upper) -> Binning:
+    m, nb = plan.m, plan.num_bins
+    return Binning(
+        bins=buf[:m],
+        bin_size=buf[m:m + nb],
+        bin_offset=buf[m + nb:m + 2 * nb],
+        bin_of_row=classify(sizes, upper),
+        max_size=buf[m + 2 * nb],
+    )

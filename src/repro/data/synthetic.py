@@ -1,0 +1,96 @@
+"""Deterministic, resumable synthetic data pipeline.
+
+Every batch is a pure function of (seed, step) — the stream needs no
+buffering, replays exactly after restart (the trainer checkpoints just the
+step counter), and shards trivially across hosts (each host materializes
+only its batch slice).
+
+Token sequences follow a noisy affine recurrence t[i+1] = (a·t[i] + c) % V
+with ``noise`` probability of a uniform resample — learnable structure so
+the end-to-end examples show real loss curves, not flat noise.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    noise: float = 0.1
+    mult: int = 3
+    add: int = 7
+
+
+class SyntheticTokenStream:
+    """Stateless-resumable LM token stream."""
+
+    def __init__(self, cfg: DataConfig, step: int = 0):
+        self.cfg = cfg
+        self.step = step
+
+    # -- checkpointable state -------------------------------------------
+    def state(self) -> Dict:
+        return {"step": self.step, "seed": self.cfg.seed}
+
+    @classmethod
+    def from_state(cls, cfg: DataConfig, state: Dict) -> "SyntheticTokenStream":
+        assert state["seed"] == cfg.seed, "restoring stream with wrong seed"
+        return cls(cfg, step=int(state["step"]))
+
+    # -- batch generation -------------------------------------------------
+    def _key(self, step: int):
+        return jax.random.fold_in(jax.random.PRNGKey(self.cfg.seed), step)
+
+    def batch_at(self, step: int) -> Dict[str, jax.Array]:
+        cfg = self.cfg
+        key = self._key(step)
+        k0, k1, k2 = jax.random.split(key, 3)
+        b, s, v = cfg.global_batch, cfg.seq_len, cfg.vocab_size
+        start = jax.random.randint(k0, (b, 1), 0, v)
+
+        def rec(t):
+            return (t * cfg.mult + cfg.add) % v
+
+        toks = [start]
+        for _ in range(s):
+            toks.append(rec(toks[-1]))
+        tokens = jnp.concatenate(toks, axis=1)              # (B, S+1)
+        noise_mask = jax.random.bernoulli(k1, cfg.noise, tokens.shape)
+        noise_tok = jax.random.randint(k2, tokens.shape, 0, v)
+        return {"tokens": jnp.where(noise_mask, noise_tok, tokens)
+                .astype(jnp.int32)}
+
+    def next_batch(self) -> Dict[str, jax.Array]:
+        batch = self.batch_at(self.step)
+        self.step += 1
+        return batch
+
+
+def batch_for_arch(cfg: ArchConfig, data_cfg: DataConfig, step: int,
+                   stream: Optional[SyntheticTokenStream] = None):
+    """Arch-aware batch: adds vision embeddings / encoder features."""
+    stream = stream or SyntheticTokenStream(data_cfg, step)
+    key = jax.random.fold_in(jax.random.PRNGKey(data_cfg.seed + 1), step)
+    if cfg.family == "encoder":
+        b, s = data_cfg.global_batch, data_cfg.seq_len
+        feats = jax.random.normal(key, (b, s, cfg.d_model), jnp.float32)
+        labels = (jnp.argmax(feats[..., :cfg.vocab_size], axis=-1)
+                  ).astype(jnp.int32)
+        return {"features": feats, "labels": labels}
+    batch = stream.batch_at(step)
+    if cfg.family == "vlm":
+        b = data_cfg.global_batch
+        batch["vision"] = jax.random.normal(
+            key, (b, cfg.vision_tokens, cfg.d_model), jnp.float32)
+    return batch

@@ -1,0 +1,80 @@
+"""Pallas TPU kernel: binning pass-1 histogram with VMEM accumulation.
+
+The direct analog of the paper's Alg. 1: each grid step (thread-block
+analog) owns a block of rows, classifies them against the rung bounds in
+registers/VMEM, accumulates a LOCAL histogram, and adds one line into the
+global bin_size output — one HBM transaction per block instead of one
+atomic per row (the paper's s_bin_size -> d_bin_size staging).  Also
+tracks the running max row size (Alg. 1 line 6/19) for the Alg. 3
+fast-path decision.
+
+Grid steps on TPU run sequentially per core, so the accumulation into the
+shared output block is race-free by construction (the same property the
+paper gets from atomics).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _make_kernel(upper: Tuple[int, ...], num_bins: int, block: int,
+                 m: int):
+    def kernel(sizes_ref, hist_ref, max_ref):
+        i = pl.program_id(0)
+        vals = sizes_ref[...]                          # (block,)
+        idx = i * block + jax.lax.iota(jnp.int32, block)
+        valid = idx < m
+        # classify: first rung admitting the size == count of exceeded
+        # bounds (vectorized Alg-1 range scan; bounds are static ints)
+        bin_ids = jnp.zeros((block,), jnp.int32)
+        for bound in upper:
+            bin_ids += (vals > bound).astype(jnp.int32)
+
+        @pl.when(i == 0)
+        def _init():
+            hist_ref[...] = jnp.zeros_like(hist_ref)
+            max_ref[...] = jnp.zeros_like(max_ref)
+
+        # local histogram (VMEM) -> one accumulate into the output line
+        local = jnp.zeros((num_bins,), jnp.int32)
+        for b in range(num_bins):
+            local = local.at[b].set(
+                jnp.sum(((bin_ids == b) & valid).astype(jnp.int32)))
+        hist_ref[0, :num_bins] += local
+        max_ref[0, 0] = jnp.maximum(
+            max_ref[0, 0], jnp.max(jnp.where(valid, vals, 0)))
+
+    return kernel
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("upper", "num_bins", "block",
+                                    "interpret"))
+def binning_histogram(sizes, *, upper: Tuple[int, ...], num_bins: int,
+                      block: int = 1024, interpret: bool = True):
+    """Pass-1 of the binning method as a Pallas kernel.
+
+    Returns (bin_size (num_bins,) int32, max_size () int32)."""
+    m = sizes.shape[0]
+    m_pad = -(-m // block) * block
+    if m_pad != m:
+        sizes = jnp.pad(sizes, (0, m_pad - m))
+    nb_pad = max(num_bins, 8)
+    kernel = _make_kernel(upper, num_bins, block, m)
+    hist, mx = pl.pallas_call(
+        kernel,
+        grid=(m_pad // block,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=[pl.BlockSpec((1, nb_pad), lambda i: (0, 0)),
+                   pl.BlockSpec((1, 1), lambda i: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((1, nb_pad), jnp.int32),
+                   jax.ShapeDtypeStruct((1, 1), jnp.int32)],
+        interpret=interpret,
+    )(sizes.astype(jnp.int32))
+    return hist[0, :num_bins], mx[0, 0]

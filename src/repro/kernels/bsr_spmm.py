@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: block-CSR sparse × dense matmul (BCSR SpMM).
+
+The paper's machinery lifted to TPU-native BLOCK granularity (DESIGN.md
+§2): sparsity is expressed over (bm × bk) tiles so the per-tile work is a
+dense MXU matmul, while the block row-pointer/column-id metadata keeps the
+paper's CSR discipline.  Used as the building block for block-sparse
+attention masks and sparse-weight layers; also the "numeric phase" of a
+block-level SpGEMM where the output topology came from a (block) symbolic
+phase.
+
+Layout: blocks are COO-listed per block-row in CSR order:
+  blk_rows (nnzb,) int32, blk_cols (nnzb,) int32, blocks (nnzb, bm, bk).
+Grid = (nnzb,): each step multiplies one sparse tile into its output row
+stripe — accumulation across steps with the same output block index is
+race-free on TPU (sequential grid).  Rows ids arrive via scalar prefetch
+so the output index_map can place each step's stripe.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+@functools.partial(jax.jit, static_argnames=("n_block_rows", "interpret"))
+def bsr_spmm(blk_rows, blk_cols, blocks, dense, *, n_block_rows: int,
+             interpret: bool = True):
+    """(BCSR blocks) @ dense.
+
+    blk_rows/blk_cols: (nnzb,) int32 sorted by row (CSR block order);
+    blocks: (nnzb, bm, bk); dense: (K, N) with K = n_block_cols * bk.
+    Returns (n_block_rows * bm, N).  Padding blocks: row id = a repeat of
+    the last row with a zero block (contributes nothing).
+    """
+    nnzb, bm, bk = blocks.shape
+    n = dense.shape[1]
+    dense_b = dense.reshape(-1, bk, n)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,         # blk_rows, blk_cols
+        grid=(nnzb,),
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda i, rows, cols: (i, 0, 0)),
+            pl.BlockSpec((1, bk, n), lambda i, rows, cols: (cols[i], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, n), lambda i, rows, cols:
+                               (rows[i], 0, 0)),
+        scratch_shapes=[pltpu.VMEM((bm, n), jnp.float32)],
+    )
+
+    def kernel(rows_smem, cols_smem, blocks_ref, dense_ref, out_ref,
+               acc_ref):
+        i = pl.program_id(0)
+        r = rows_smem[i]
+        prev_r = rows_smem[jnp.maximum(i - 1, 0)]
+        new_stripe = (i == 0) | (r != prev_r)
+
+        @pl.when(new_stripe)
+        def _():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        acc_ref[...] += jnp.dot(blocks_ref[0], dense_ref[0],
+                                preferred_element_type=jnp.float32)
+        out_ref[0] = acc_ref[...].astype(out_ref.dtype)
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_block_rows, bm, n), dense.dtype),
+        interpret=interpret,
+    )(blk_rows, blk_cols, blocks, dense_b)
+    return out.reshape(n_block_rows * bm, n)

@@ -1,0 +1,11 @@
+"""Jit'd public wrappers over the Pallas kernels in this package."""
+from __future__ import annotations
+
+from . import spgemm_hash
+from .spgemm_hash import (numeric_bin_call, numeric_binned, symbolic_bin_call,
+                          symbolic_binned)
+
+__all__ = [
+    "spgemm_hash", "symbolic_bin_call", "numeric_bin_call",
+    "symbolic_binned", "numeric_binned",
+]

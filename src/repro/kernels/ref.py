@@ -1,0 +1,91 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each kernel's sweep test asserts allclose against these references.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.csr import CSR
+
+
+def spgemm_dense_ref(A: CSR, B: CSR) -> jax.Array:
+    """Dense oracle for any SpGEMM path."""
+    return A.to_dense() @ B.to_dense()
+
+
+def symbolic_ref(A: CSR, B: CSR) -> np.ndarray:
+    """n_nz per output row, from the dense product's support."""
+    d = np.asarray(spgemm_dense_ref(A, B))
+    return (d != 0).sum(axis=1).astype(np.int32)
+
+
+def row_nnz_from_support(A: CSR, B: CSR) -> np.ndarray:
+    """Structural n_nz per row (counts symbolic support even where values
+    cancel numerically — matches what hash/ESC symbolic computes)."""
+    a = np.asarray(A.to_dense()) != 0
+    b = np.asarray(B.to_dense()) != 0
+    support = (a.astype(np.int64) @ b.astype(np.int64)) > 0
+    return support.sum(axis=1).astype(np.int32)
+
+
+def bsr_spmm_ref(block_rows, block_cols, blocks, dense, *, nrows_blocks,
+                 block_shape):
+    """Block-CSR (COO-listed blocks) × dense reference."""
+    bm, bk = block_shape
+    out = jnp.zeros((nrows_blocks * bm, dense.shape[1]), dense.dtype)
+    for i in range(block_rows.shape[0]):
+        r, c = int(block_rows[i]), int(block_cols[i])
+        if r < 0:
+            continue
+        out = out.at[r * bm:(r + 1) * bm].add(
+            blocks[i] @ dense[c * bk:(c + 1) * bk])
+    return out
+
+
+def attention_ref(q, k, v, *, causal: bool = True, scale=None):
+    """Unfused attention oracle.  q,k,v: (B, S, H, D) / k,v may have fewer
+    KV heads (GQA) — heads are repeated to match."""
+    bq, sq, hq, d = q.shape
+    hk = k.shape[2]
+    if hk != hq:
+        rep = hq // hk
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k) * scale
+    if causal:
+        sk = k.shape[1]
+        mask = jnp.tril(jnp.ones((sq, sk), bool), k=sk - sq)
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def ssm_scan_ref(x, dt, A_diag, Bmat, Cmat, D):
+    """Selective-SSM (Mamba-style) sequential oracle.
+
+    x: (B, L, H) inputs; dt: (B, L, H) softplus-ed step; A_diag: (H, N);
+    Bmat/Cmat: (B, L, N); D: (H,).  Returns (B, L, H).
+    """
+    bsz, L, H = x.shape
+    N = A_diag.shape[1]
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp
+        dA = jnp.exp(dtt[..., None] * A_diag[None])          # (B, H, N)
+        dBx = dtt[..., None] * bt[:, None, :] * xt[..., None]
+        h = h * dA + dBx
+        y = jnp.einsum("bhn,bn->bh", h, ct)
+        return h, y
+
+    h0 = jnp.zeros((bsz, H, N), x.dtype)
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(Bmat, 1, 0), jnp.moveaxis(Cmat, 1, 0))
+    _, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1)
+    return y + x * D[None, None]

@@ -1,0 +1,489 @@
+"""Pallas TPU kernels: per-bin hash-table SpGEMM phases (OpSparse §5.2, §5.6).
+
+One grid step computes ONE output row (kernel1..7 of the paper); the hash
+table lives in VMEM scratch (the analog of the V100's 96 KB shared memory —
+DESIGN.md §2/§5).  Row ids of the bin and the bin's row count arrive via
+scalar prefetch; the CSR arrays stay in HBM (`pl.ANY`) and are loaded with
+dynamic slices.
+
+Probe disciplines (paper §5.2, Fig. 9):
+  * ``single_access=True``  — Algorithms 4/5: ONE table transaction per
+    probe iteration.  On GPU this is the swapped-`atomicCAS` trick; a Pallas
+    grid step owns its row's table, so the same discipline is a single
+    read-modify-write per iteration, no CAS needed.
+  * ``single_access=False`` — the nsparse/spECK baseline: check-then-CAS,
+    i.e. a second table transaction whenever an empty slot is claimed (and
+    for the numeric phase an extra transaction on the value slot).
+
+Both variants report per-row TABLE ACCESS COUNTS so the Fig. 9 reproduction
+can compare transaction counts exactly rather than relying on interpret-mode
+wall time.
+
+Overflow routing: the orchestrator bins rows so that row size <= table_size
+/ multiplier; rows larger than the top rung go straight to the ESC (HBM)
+accumulator (`core/esc.py`) — the analog of the paper's global-memory hash
+kernels (symbolic kernel8 / numeric kernel7).  Unlike the paper we never
+try-and-recompute: for the symbolic phase n_prod >= n_nz bounds the table
+occupancy a priori, so the direct route can never overflow (the paper's
+0.8-threshold recompute exists because it bins by n_prod but sizes kernel7's
+table optimistically).  A probe-count guard (2*t_size) still protects
+against misuse.
+
+Sorting/condensing (paper's numeric "condense + sort" phases): done as a
+*vectorized epilogue* outside the kernel — per-row argsort over the dumped
+tables.  On TPU, sorts vectorize on the VPU, whereas in-kernel scalar
+condense loops would serialize; this is the hardware adaptation recorded in
+DESIGN.md.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import esc
+from repro.core.binning import Binning
+from repro.core.binning_ranges import BinLadder
+from repro.core.csr import CSR
+
+HASH_SCALE = 107  # nsparse's multiplicative constant, kept (§5.2 "same way")
+_PROBE_GUARD_FACTOR = 2  # safety: bail after 2*t_size probes (misuse guard)
+
+INT32_MAX = np.iinfo(np.int32).max
+
+
+def _table_geom(t_size: int) -> Tuple[int, int]:
+    """VMEM scratch geometry: lane-aligned (rows, 128)."""
+    rows = max(1, -(-t_size // 128))
+    return rows, 128
+
+
+def _is_pow2(n: int) -> bool:
+    return n & (n - 1) == 0
+
+
+def _hash_init(key, t_size: int):
+    if _is_pow2(t_size):
+        return (key * HASH_SCALE) & (t_size - 1)
+    return (key * HASH_SCALE) % t_size
+
+
+def _hash_next(h, t_size: int):
+    if _is_pow2(t_size):          # §5.2: logic-AND when pow2 (symbolic)
+        return (h + 1) & (t_size - 1)
+    return jnp.where(h + 1 < t_size, h + 1, 0)  # mod path (numeric)
+
+
+# ---------------------------------------------------------------------------
+# Symbolic kernel: count distinct column ids per row (no value multiply).
+# ---------------------------------------------------------------------------
+
+def _make_symbolic_kernel(t_size: int, single_access: bool):
+    t_rows, t_lanes = _table_geom(t_size)
+    guard = _PROBE_GUARD_FACTOR * t_size
+
+    def kernel(rows_smem, count_smem, a_rpt, a_col, b_rpt, b_col,
+               nnz_out, acc_out, table):
+        i = pl.program_id(0)
+        active = i < count_smem[0]
+        r = rows_smem[i]
+        # Fresh table per row (the paper re-initializes per thread block).
+        table[...] = jnp.full((t_rows, t_lanes), -1, jnp.int32)
+        a_lo = jnp.where(active, a_rpt[r], 0)
+        a_hi = jnp.where(active, a_rpt[r + 1], 0)
+
+        def insert(key, carry):
+            nnz, acc = carry
+            h0 = _hash_init(key, t_size)
+
+            def cond(st):
+                h, done, ins, probes = st
+                return (~done) & (probes < guard)
+
+            if single_access:
+                def body(st):
+                    h, done, ins, probes = st
+                    hr, hl = h // 128, h % 128
+                    cur = table[hr, hl]                       # 1 transaction
+                    empty = cur == -1
+                    table[hr, hl] = jnp.where(empty, key, cur)
+                    hit = empty | (cur == key)
+                    return (_hash_next(h, t_size), hit, ins | empty,
+                            probes + 1)
+            else:
+                def body(st):
+                    h, done, ins, probes = st
+                    hr, hl = h // 128, h % 128
+                    cur = table[hr, hl]                       # transaction 1
+                    empty = cur == -1
+                    # nsparse-style: a separate CAS transaction claims the
+                    # empty slot (read-again-and-write).
+                    cur2 = jnp.where(empty, table[hr, hl], cur)  # transaction 2
+                    table[hr, hl] = jnp.where(empty, key, cur2)
+                    hit = empty | (cur == key)
+                    return (_hash_next(h, t_size), hit, ins | empty,
+                            probes + jnp.where(empty, 2, 1).astype(jnp.int32))
+
+            h, done, ins, probes = jax.lax.while_loop(
+                cond, body, (h0, jnp.asarray(False), jnp.asarray(False),
+                             jnp.int32(0)))
+            return nnz + ins.astype(jnp.int32), acc + probes
+
+        def outer(e, carry):
+            k = a_col[a_lo + e]
+            b_lo = b_rpt[k]
+            b_hi = b_rpt[k + 1]
+
+            def inner(j, carry):
+                c = b_col[b_lo + j]
+                return insert(c, carry)
+
+            return jax.lax.fori_loop(0, b_hi - b_lo, inner, carry)
+
+        nnz, acc = jax.lax.fori_loop(0, a_hi - a_lo, outer,
+                                     (jnp.int32(0), jnp.int32(0)))
+        nnz_out[0] = jnp.where(active, nnz, 0)
+        acc_out[0] = jnp.where(active, acc, 0)
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("t_size", "rows_cap", "single_access", "interpret"))
+def symbolic_bin_call(rows, count, a_rpt, a_col, b_rpt, b_col, *,
+                      t_size: int, rows_cap: int, single_access: bool,
+                      interpret: bool):
+    """Run the symbolic hash kernel over one bin.
+
+    rows:  (rows_cap,) int32 row ids (padded); count: (1,) int32 valid rows.
+    Returns (nnz, accesses): both (rows_cap,) int32.
+    """
+    t_rows, t_lanes = _table_geom(t_size)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(rows_cap,),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)] * 4,
+        out_specs=[
+            pl.BlockSpec((1,), lambda i, rows, cnt: (i,)),
+            pl.BlockSpec((1,), lambda i, rows, cnt: (i,)),
+        ],
+        scratch_shapes=[pltpu.VMEM((t_rows, t_lanes), jnp.int32)],
+    )
+    kernel = _make_symbolic_kernel(t_size, single_access)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((rows_cap,), jnp.int32),
+            jax.ShapeDtypeStruct((rows_cap,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(rows, count, a_rpt, a_col, b_rpt, b_col)
+
+
+# ---------------------------------------------------------------------------
+# Numeric kernel: accumulate values per row into (col, val) hash tables.
+# ---------------------------------------------------------------------------
+
+def _make_numeric_kernel(t_size: int, single_access: bool, val_dtype):
+    t_rows, t_lanes = _table_geom(t_size)
+    guard = _PROBE_GUARD_FACTOR * t_size
+
+    def kernel(rows_smem, count_smem, a_rpt, a_col, a_val, b_rpt, b_col,
+               b_val, col_out, val_out, acc_out, col_tab, val_tab):
+        i = pl.program_id(0)
+        active = i < count_smem[0]
+        r = rows_smem[i]
+        col_tab[...] = jnp.full((t_rows, t_lanes), -1, jnp.int32)
+        val_tab[...] = jnp.zeros((t_rows, t_lanes), val_dtype)
+        a_lo = jnp.where(active, a_rpt[r], 0)
+        a_hi = jnp.where(active, a_rpt[r + 1], 0)
+
+        def insert(key, prod, acc):
+            h0 = _hash_init(key, t_size)
+
+            def cond(st):
+                h, done, probes = st
+                return (~done) & (probes < guard)
+
+            if single_access:
+                # Alg 5: one col-table transaction per iteration; the value
+                # slot is touched only on the terminal iteration.
+                def body(st):
+                    h, done, probes = st
+                    hr, hl = h // 128, h % 128
+                    cur = col_tab[hr, hl]                     # 1 transaction
+                    empty = cur == -1
+                    hit = empty | (cur == key)
+                    col_tab[hr, hl] = jnp.where(empty, key, cur)
+                    val_tab[hr, hl] = val_tab[hr, hl] + jnp.where(
+                        hit, prod, jnp.zeros((), val_dtype))
+                    return (_hash_next(h, t_size), hit, probes + 1)
+            else:
+                # nsparse-style: read, branch, then CAS-claim (second
+                # transaction) when the slot was empty.
+                def body(st):
+                    h, done, probes = st
+                    hr, hl = h // 128, h % 128
+                    cur = col_tab[hr, hl]                     # transaction 1
+                    empty = cur == -1
+                    cur2 = jnp.where(empty, col_tab[hr, hl], cur)  # transaction 2
+                    col_tab[hr, hl] = jnp.where(empty, key, cur2)
+                    hit = empty | (cur == key)
+                    val_tab[hr, hl] = val_tab[hr, hl] + jnp.where(
+                        hit, prod, jnp.zeros((), val_dtype))
+                    return (_hash_next(h, t_size), hit,
+                            probes + jnp.where(empty, 2, 1).astype(jnp.int32))
+
+            h, done, probes = jax.lax.while_loop(
+                cond, body, (h0, jnp.asarray(False), jnp.int32(0)))
+            return acc + probes
+
+        def outer(e, acc):
+            k = a_col[a_lo + e]
+            av = a_val[a_lo + e]
+            b_lo = b_rpt[k]
+            b_hi = b_rpt[k + 1]
+
+            def inner(j, acc):
+                c = b_col[b_lo + j]
+                bv = b_val[b_lo + j]
+                return insert(c, av * bv, acc)
+
+            return jax.lax.fori_loop(0, b_hi - b_lo, inner, acc)
+
+        acc = jax.lax.fori_loop(0, a_hi - a_lo, outer, jnp.int32(0))
+        col_out[0, :] = col_tab[...].reshape(-1)
+        val_out[0, :] = val_tab[...].reshape(-1)
+        acc_out[0] = jnp.where(active, acc, 0)
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("t_size", "rows_cap", "single_access", "interpret"))
+def numeric_bin_call(rows, count, a_rpt, a_col, a_val, b_rpt, b_col, b_val,
+                     *, t_size: int, rows_cap: int, single_access: bool,
+                     interpret: bool):
+    """Run the numeric hash kernel over one bin.
+
+    Returns (col_tabs, val_tabs, accesses):
+      col_tabs (rows_cap, t_pad) int32 — raw hash tables (-1 = empty);
+      val_tabs (rows_cap, t_pad);  accesses (rows_cap,) int32.
+    """
+    t_rows, t_lanes = _table_geom(t_size)
+    t_pad = t_rows * t_lanes
+    val_dtype = a_val.dtype
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(rows_cap,),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)] * 6,
+        out_specs=[
+            pl.BlockSpec((1, t_pad), lambda i, rows, cnt: (i, 0)),
+            pl.BlockSpec((1, t_pad), lambda i, rows, cnt: (i, 0)),
+            pl.BlockSpec((1,), lambda i, rows, cnt: (i,)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((t_rows, t_lanes), jnp.int32),
+            pltpu.VMEM((t_rows, t_lanes), val_dtype),
+        ],
+    )
+    kernel = _make_numeric_kernel(t_size, single_access, val_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((rows_cap, t_pad), jnp.int32),
+            jax.ShapeDtypeStruct((rows_cap, t_pad), val_dtype),
+            jax.ShapeDtypeStruct((rows_cap,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(rows, count, a_rpt, a_col, a_val, b_rpt, b_col, b_val)
+
+
+# ---------------------------------------------------------------------------
+# Vectorized epilogue: condense + sort the dumped tables into CSR storage.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("nnz_capacity",))
+def numeric_epilogue(col_tabs, val_tabs, bin_rows, count, rpt, c_col, c_val,
+                     *, nnz_capacity: int):
+    """Sort each row's table by column id and scatter into C storage.
+
+    The paper's condense (shared_offset atomics) + sort phases, vectorized:
+    argsort over the table (empties keyed to INT32_MAX sort last), masked
+    scatter to ``C.col/C.val`` at ``rpt[row] + j``.
+    """
+    rows_cap, t_pad = col_tabs.shape
+    sort_key = jnp.where(col_tabs < 0, INT32_MAX, col_tabs)
+    order = jnp.argsort(sort_key, axis=1)
+    col_sorted = jnp.take_along_axis(col_tabs, order, axis=1)
+    val_sorted = jnp.take_along_axis(val_tabs, order, axis=1)
+    nnz_row = jnp.sum((col_tabs >= 0).astype(jnp.int32), axis=1)
+
+    valid_row = jnp.arange(rows_cap, dtype=jnp.int32) < count
+    lane = jnp.arange(t_pad, dtype=jnp.int32)[None, :]
+    in_row = lane < nnz_row[:, None]
+    mask = in_row & valid_row[:, None]
+    start = rpt[jnp.where(valid_row, bin_rows, 0)][:, None]
+    target = jnp.where(mask, start + lane, nnz_capacity)   # OOB -> dropped
+    c_col = c_col.at[target.reshape(-1)].set(
+        col_sorted.reshape(-1), mode="drop")
+    c_val = c_val.at[target.reshape(-1)].set(
+        val_sorted.reshape(-1), mode="drop")
+    return c_col, c_val
+
+
+# ---------------------------------------------------------------------------
+# Binned drivers (called by core.spgemm with method="hash").
+# ---------------------------------------------------------------------------
+
+def _bin_schedule(binning: Binning, ladder: BinLadder):
+    """Host-side launch plan.  LARGEST bins first — the §5.5 launch-order
+    rule (the long pole starts earliest; no host sync until all bins are
+    dispatched)."""
+    bin_sizes = np.asarray(binning.bin_size)   # host sync: launch params
+    order = list(range(len(ladder.table_sizes)))[::-1]
+    return [(b, int(bin_sizes[b])) for b in order if bin_sizes[b] > 0], \
+        int(bin_sizes[len(ladder.table_sizes)])
+
+
+def _fallback_rows(binning: Binning, ladder: BinLadder, fall_count: int,
+                   m: int):
+    fallback_bin = len(ladder.table_sizes)
+    cap = _next_bucket(fall_count)
+    rows, _ = binning.rows_of_bin(fallback_bin, cap)
+    valid = jnp.arange(cap, dtype=jnp.int32) < fall_count
+    return jnp.where(valid, rows, m), valid
+
+
+def _next_bucket(n: int, minimum: int = 8) -> int:
+    b = minimum
+    while b < n:
+        b <<= 1
+    return b
+
+
+def symbolic_binned(A: CSR, B: CSR, binning: Binning, ladder: BinLadder, *,
+                    prod_capacity: int, single_access: bool = True,
+                    interpret: bool = True,
+                    collect_accesses: bool = False):
+    """Symbolic phase over all bins.  Returns the (M+1,) n_nz buffer
+    (optionally also the total table-access count)."""
+    m = A.nrows
+    nnz_buf = jnp.zeros(m + 1, dtype=jnp.int32)
+    accesses = jnp.int32(0)
+    schedule, fall_count = _bin_schedule(binning, ladder)
+
+    for b, cnt in schedule:
+        rows_cap = _next_bucket(cnt)
+        rows, _ = binning.rows_of_bin(b, rows_cap)
+        count = jnp.asarray([cnt], jnp.int32)
+        nnz_bin, acc_bin = symbolic_bin_call(
+            rows, count, A.rpt, A.col, B.rpt, B.col,
+            t_size=ladder.table_sizes[b], rows_cap=rows_cap,
+            single_access=single_access, interpret=interpret)
+        valid = jnp.arange(rows_cap, dtype=jnp.int32) < cnt
+        tgt = jnp.where(valid, rows, m + 1)
+        nnz_buf = nnz_buf.at[tgt].set(nnz_bin, mode="drop")
+        if collect_accesses:
+            accesses = accesses + jnp.sum(jnp.where(valid, acc_bin, 0))
+
+    if fall_count:
+        # Global-memory-analog rung: ESC on the gathered sub-matrix.
+        from repro.core.csr import gather_rows
+        rows, valid = _fallback_rows(binning, ladder, fall_count, m)
+        sub = gather_rows(A, rows, valid)
+        sub_prod = int(jnp.sum(
+            jnp.where(valid, nprod_of_rows(A, B, rows), 0)))
+        sub_nnz = esc.symbolic(sub, B,
+                               prod_capacity=_next_bucket(max(sub_prod, 1)))
+        tgt = jnp.where(valid, rows, m + 1)
+        nnz_buf = nnz_buf.at[tgt].set(sub_nnz[:rows.shape[0]], mode="drop")
+
+    if collect_accesses:
+        return nnz_buf, accesses
+    return nnz_buf
+
+
+def nprod_of_rows(A: CSR, B: CSR, rows: jax.Array) -> jax.Array:
+    b_sizes = B.nnz_per_row()
+    safe_rows = jnp.minimum(rows, A.nrows - 1)
+    lo, hi = A.rpt[safe_rows], A.rpt[safe_rows + 1]
+
+    def per_row(l, h):
+        # Sum of B-row sizes over a variable slice — segment via mask.
+        idx = jnp.arange(A.capacity, dtype=jnp.int32)
+        mask = (idx >= l) & (idx < h)
+        return jnp.sum(jnp.where(mask, b_sizes[jnp.minimum(A.col, B.nrows - 1)], 0))
+
+    return jax.vmap(per_row)(lo, hi)
+
+
+def numeric_binned(A: CSR, B: CSR, rpt: jax.Array, binning: Binning,
+                   ladder: BinLadder, *, prod_capacity: int,
+                   nnz_capacity: int, single_access: bool = True,
+                   interpret: bool = True,
+                   collect_accesses: bool = False):
+    """Numeric phase over all bins -> CSR (optionally + access total)."""
+    m, n = A.nrows, B.ncols
+    c_col = jnp.zeros(nnz_capacity, jnp.int32)
+    c_val = jnp.zeros(nnz_capacity, A.val.dtype)
+    accesses = jnp.int32(0)
+    schedule, fall_count = _bin_schedule(binning, ladder)
+
+    for b, cnt in schedule:
+        rows_cap = _next_bucket(cnt)
+        rows, _ = binning.rows_of_bin(b, rows_cap)
+        count = jnp.asarray([cnt], jnp.int32)
+        col_tabs, val_tabs, acc_bin = numeric_bin_call(
+            rows, count, A.rpt, A.col, A.val, B.rpt, B.col, B.val,
+            t_size=ladder.table_sizes[b], rows_cap=rows_cap,
+            single_access=single_access, interpret=interpret)
+        c_col, c_val = numeric_epilogue(
+            col_tabs, val_tabs, rows, jnp.int32(cnt), rpt, c_col, c_val,
+            nnz_capacity=nnz_capacity)
+        if collect_accesses:
+            valid = jnp.arange(rows_cap, dtype=jnp.int32) < cnt
+            accesses = accesses + jnp.sum(jnp.where(valid, acc_bin, 0))
+
+    if fall_count:
+        from repro.core.csr import gather_rows
+        rows, valid = _fallback_rows(binning, ladder, fall_count, m)
+        sub = gather_rows(A, rows, valid)
+        sub_prod = int(jnp.sum(
+            jnp.where(valid, nprod_of_rows(A, B, rows), 0)))
+        sub_cap = _next_bucket(max(sub_prod, 1))
+        subC = esc.spgemm_fused(sub, B, prod_capacity=sub_cap,
+                                nnz_capacity=sub_cap)
+        c_col, c_val = scatter_sub_rows(
+            subC, rows, valid, rpt, c_col, c_val, nnz_capacity=nnz_capacity)
+
+    C = CSR(rpt=rpt, col=c_col, val=c_val, shape=(m, n))
+    if collect_accesses:
+        return C, accesses
+    return C
+
+
+@functools.partial(jax.jit, static_argnames=("nnz_capacity",))
+def scatter_sub_rows(subC: CSR, orig_rows, valid, rpt, c_col, c_val, *,
+                     nnz_capacity: int):
+    """Copy rows of a sub-CSR result into the final C storage."""
+    sub_rows = subC.row_ids()                     # sub-row of each entry
+    entry_ok = subC.entry_mask() & (sub_rows < subC.nrows)
+    safe_sub = jnp.minimum(sub_rows, subC.nrows - 1)
+    row_ok = entry_ok & valid[safe_sub]
+    orig = orig_rows[safe_sub]
+    offs = jnp.arange(subC.capacity, dtype=jnp.int32) - subC.rpt[safe_sub]
+    target = jnp.where(row_ok, rpt[jnp.minimum(orig, rpt.shape[0] - 2)] + offs,
+                       nnz_capacity)
+    c_col = c_col.at[target].set(subC.col, mode="drop")
+    c_val = c_val.at[target].set(subC.val, mode="drop")
+    return c_col, c_val

@@ -1,0 +1,287 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks the device count on first
+#   init).  512 placeholder host devices build the production meshes; this
+#   override lives ONLY here — tests/benches see the single real device.
+
+import argparse   # noqa: E402
+import json       # noqa: E402
+import time       # noqa: E402
+import traceback  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax        # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import ARCHS, get_arch          # noqa: E402
+from repro.models.hints import activation_mesh     # noqa: E402
+from repro.models.model import Model               # noqa: E402
+from repro.optim import AdamWConfig                # noqa: E402
+from repro.launch.mesh import make_production_mesh, data_axes  # noqa: E402
+from repro.launch import shapes as shp             # noqa: E402
+from repro.launch import sharding as shd           # noqa: E402
+from repro.launch.steps import (TrainState, abstract_train_state,  # noqa: E402
+                                make_decode_step, make_prefill_step,
+                                make_train_step)
+from repro.launch.roofline import (model_flops_for_cell,  # noqa: E402
+                                   terms_from_compiled)
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def _named(tree, mesh):
+    return jax.tree_util.tree_map(
+        lambda p: NamedSharding(mesh, p), tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _bf16_arg_bytes(*aval_sharding_pairs) -> int:
+    """Per-device bf16 argument bytes: sum of per-shard sizes over all
+    bf16 leaves of the given (aval_tree, named_sharding_tree) pairs."""
+    import numpy as np
+    total = 0
+    for avals, shardings in aval_sharding_pairs:
+        flat_a = jax.tree_util.tree_leaves(avals)
+        flat_s = jax.tree_util.tree_leaves(
+            shardings, is_leaf=lambda x: isinstance(x, NamedSharding))
+        if len(flat_s) != len(flat_a):
+            flat_s = [None] * len(flat_a)
+        for a, s in zip(flat_a, flat_s):
+            if str(getattr(a, "dtype", "")) != "bfloat16":
+                continue
+            shape = tuple(a.shape)
+            if isinstance(s, NamedSharding):
+                shape = s.shard_shape(shape)
+            total += 2 * int(np.prod(shape)) if shape else 2
+    return total
+
+
+def _mem_fields(compiled):
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    out = {}
+    for f in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes", "peak_memory_in_bytes"):
+        v = getattr(ma, f, None)
+        if v is not None:
+            out[f] = int(v)
+    if not out and ma is not None:
+        out["repr"] = str(ma)
+    return out
+
+
+# Gradient-accumulation factor per arch (keeps train_4k activations inside
+# the 16 GB/chip HBM budget; chosen from the memory_analysis sweep).
+MICROBATCHES = {
+    "falcon-mamba-7b": 8, "hubert-xlarge": 2, "qwen3-1.7b": 4,
+    "minitron-4b": 4, "internlm2-1.8b": 4, "codeqwen1.5-7b": 4,
+    "zamba2-1.2b": 8, "olmoe-1b-7b": 4, "qwen3-moe-30b-a3b": 4,
+    "llama-3.2-vision-90b": 16,
+}
+
+# Gather-once FSDP (§Perf iteration 2): viable for archs whose TP-sharded
+# bf16 param copy fits next to activations; llama-90b's 11 GiB copy does
+# not.  OFF by default — the recorded sweep is the paper-faithful baseline;
+# pass --opt (or gather_once=True) for the optimized variants.
+GATHER_ONCE_OK = {a: a != "llama-3.2-vision-90b" for a in MICROBATCHES}
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               microbatches: int | None = None, gather_once: bool = False,
+               overrides: dict | None = None, quantize: bool = False):
+    """Lower + compile one (arch x shape x mesh) cell; return artifacts.
+
+    ``gather_once`` / ``overrides`` / ``quantize`` (int8 weight-only
+    serving) select the beyond-baseline optimizations recorded in
+    EXPERIMENTS.md §Perf.
+    """
+    cfg = get_arch(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    cell = shp.SHAPES[shape_name]
+    if shape_name not in shp.cells_for(cfg):
+        raise ValueError(f"{arch} skips {shape_name} (see DESIGN.md)")
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    model = Model(cfg)
+    specs = model.param_specs()
+
+    t0 = time.perf_counter()
+    with mesh, activation_mesh(mesh):
+        if cell.kind == "train":
+            rules = shd.train_rules(mesh)
+            param_ps = shd.param_pspecs(specs, rules, mesh)
+            state_ps = TrainState(
+                params=param_ps,
+                opt=type(abstract_train_state(model).opt)(
+                    m=param_ps, v=param_ps, master=param_ps, step=P()))
+            state = abstract_train_state(model)
+            batch = shp.abstract_batch(cfg, cell)
+            batch_ps = shd.batch_pspecs(cfg, batch, mesh, cell.global_batch)
+            mb = microbatches or MICROBATCHES.get(arch, 4)
+            # each microbatch must still fill the data axes
+            dp_sz = mesh.size // mesh.shape["model"]
+            mb = max(1, min(mb, cell.global_batch // dp_sz))
+            gather_specs = None
+            if gather_once and GATHER_ONCE_OK.get(arch, False):
+                gather_specs = shd.param_pspecs(
+                    specs, shd.serve_rules(mesh), mesh)
+            fn = make_train_step(model, AdamWConfig(), microbatches=mb,
+                                 gather_specs=gather_specs)
+            jitted = jax.jit(
+                fn,
+                in_shardings=(_named(state_ps, mesh), _named(batch_ps, mesh)),
+                out_shardings=(_named(state_ps, mesh), None),
+                donate_argnums=(0,))
+            lowered = jitted.lower(state, batch)
+            bf16_pairs = [(state, _named(state_ps, mesh))]
+        elif cell.kind == "prefill":
+            rules = shd.serve_rules(mesh)
+            param_ps = shd.param_pspecs(specs, rules, mesh)
+            params = model.abstract_params()
+            batch = shp.abstract_batch(cfg, cell)
+            batch_ps = shd.batch_pspecs(cfg, batch, mesh, cell.global_batch)
+            fn = make_prefill_step(model, kv_cache_len=cell.seq_len)
+            caches_out_ps = None
+            if not cfg.is_encoder:
+                ab_caches = model.init_caches(cell.global_batch,
+                                              cell.seq_len, abstract=True)
+                caches_out_ps = shd.cache_pspecs(
+                    cfg, ab_caches, mesh, global_batch=cell.global_batch,
+                    seq_len=cell.seq_len)
+            out_ps = (None, _named(caches_out_ps, mesh)
+                      if caches_out_ps is not None else None)
+            jitted = jax.jit(
+                fn,
+                in_shardings=(_named(param_ps, mesh), _named(batch_ps, mesh)),
+                out_shardings=out_ps)
+            lowered = jitted.lower(params, batch)
+            bf16_pairs = [(params, _named(param_ps, mesh))]
+        else:  # decode
+            rules = shd.serve_rules(mesh)
+            param_ps = shd.param_pspecs(specs, rules, mesh)
+            params = model.abstract_params()
+            if quantize:   # int8 weight-only serving (models/quant.py)
+                from repro.models.quant import (abstract_quantized,
+                                                quant_pspecs)
+                param_ps = quant_pspecs(param_ps, params)
+                params = abstract_quantized(params)
+            token, caches, pos = shp.abstract_decode_inputs(cfg, cell)
+            cache_ps = shd.cache_pspecs(
+                cfg, caches, mesh, global_batch=cell.global_batch,
+                seq_len=cell.seq_len)
+            dp = data_axes(mesh)
+            dp = dp if len(dp) > 1 else dp[0]
+            b_ok = cell.global_batch % mesh.size // mesh.shape["model"] == 0
+            tok_ps = shd.batch_pspecs(cfg, {"t": token}, mesh,
+                                      cell.global_batch)["t"]
+            fn = make_decode_step(model)
+            jitted = jax.jit(
+                fn,
+                in_shardings=(_named(param_ps, mesh),
+                              NamedSharding(mesh, tok_ps),
+                              _named(cache_ps, mesh),
+                              NamedSharding(mesh, P())),
+                out_shardings=(NamedSharding(mesh, tok_ps), None,
+                               _named(cache_ps, mesh)),
+                donate_argnums=(2,))
+            lowered = jitted.lower(params, token, caches, pos)
+            bf16_pairs = [(params, _named(param_ps, mesh)),
+                          (caches, _named(cache_ps, mesh))]
+
+        t_lower = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0
+
+    mf = model_flops_for_cell(cfg, specs, cell.kind,
+                              shp.tokens_per_step(cfg, cell))
+    terms = terms_from_compiled(compiled, chips=chips, model_flops=mf)
+    mem = _mem_fields(compiled)
+    # CPU-backend artifact correction: XLA CPU has no native bf16 dot — it
+    # converts operands to f32 and hoists loop-invariant converts, so temp
+    # carries an f32 copy (2x bytes) of ~every bf16 argument (weights, KV
+    # caches).  TPU consumes bf16 natively; we report temp minus that
+    # estimated duplication alongside the raw number.
+    bf16_args = _bf16_arg_bytes(*bf16_pairs)
+    dup = 2 * bf16_args
+    temp = mem.get("temp_size_in_bytes", 0)
+    mem["cpu_bf16_dup_bytes_est"] = dup
+    mem["temp_tpu_estimate_bytes"] = max(temp - min(dup, temp), 0)
+    artifact = {
+        "arch": arch, "shape": shape_name, "kind": cell.kind,
+        "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory_analysis": mem,
+        "roofline": terms.to_json(),
+    }
+    return artifact, compiled
+
+
+def run_cell(arch, shape_name, multi_pod, save=True, verbose=True,
+             gather_once=False, overrides=None, tag_suffix="",
+             quantize=False):
+    tag = (f"{arch}|{shape_name}|{'2x16x16' if multi_pod else '16x16'}"
+           f"{tag_suffix}")
+    try:
+        artifact, compiled = lower_cell(arch, shape_name,
+                                        multi_pod=multi_pod,
+                                        gather_once=gather_once,
+                                        overrides=overrides,
+                                        quantize=quantize)
+    except Exception as e:
+        print(f"[FAIL] {tag}: {e}")
+        traceback.print_exc()
+        return None
+    if verbose:
+        ma = artifact["memory_analysis"]
+        r = artifact["roofline"]
+        print(f"[ok] {tag} compile={artifact['compile_s']}s "
+              f"flops={r['flops']:.3e} bytes={r['hbm_bytes']:.3e} "
+              f"coll={r['coll_bytes']:.3e} bottleneck={r['bottleneck']} "
+              f"mfu_roofline={r['mfu_roofline']:.3f} "
+              f"temp={ma.get('temp_size_in_bytes', 0)/2**30:.2f}GiB/dev "
+              f"temp_tpu~={ma.get('temp_tpu_estimate_bytes', 0)/2**30:.2f}"
+              f"GiB arg={ma.get('argument_size_in_bytes', 0)/2**30:.2f}GiB")
+    if save:
+        RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+        name = (f"{arch}_{shape_name}_"
+                f"{artifact['mesh'].replace('x', '-')}{tag_suffix}.json")
+        (RESULTS_DIR / name).write_text(json.dumps(artifact, indent=1))
+    return artifact
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default=None,
+                    help="architecture id (default: all)")
+    ap.add_argument("--shape", default=None,
+                    help="shape cell (default: all applicable)")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else sorted(ARCHS)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    n_ok = n_fail = 0
+    for arch in archs:
+        cfg = get_arch(arch)
+        cells = [args.shape] if args.shape else shp.cells_for(cfg)
+        for cell in cells:
+            for mp in meshes:
+                art = run_cell(arch, cell, mp)
+                if art is None:
+                    n_fail += 1
+                else:
+                    n_ok += 1
+    print(f"dry-run complete: {n_ok} ok, {n_fail} failed")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

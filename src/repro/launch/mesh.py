@@ -1,0 +1,34 @@
+"""Production meshes (per brief §MULTI-POD DRY-RUN).
+
+``make_production_mesh`` is a FUNCTION so importing this module never
+touches jax device state.  The 512-device host-platform override belongs
+to ``dryrun.py`` ONLY (its first two lines) — tests and benches see the
+single real CPU device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh) -> tuple:
+    """The data-parallel axes of a production mesh ('pod'+'data')."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def dp_size(mesh) -> int:
+    out = 1
+    for a in data_axes(mesh):
+        out *= mesh.shape[a]
+    return out
+
+
+def make_host_mesh(model_axis: int = 1):
+    """A tiny mesh over the real local devices (tests / examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))

@@ -1,0 +1,118 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from the
+dry-run artifacts (results/dryrun/*.json) + the analytic estimator."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import ARCHS, get_arch
+from repro.launch import shapes as shp
+from repro.launch.analytic import analytic_cell
+from repro.launch.dryrun import MICROBATCHES
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def _load(arch, shape, mesh):
+    f = RESULTS / f"{arch}_{shape}_{mesh}.json"
+    return json.loads(f.read_text()) if f.exists() else None
+
+
+def _fmt_t(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def _advice(cfg, cell, a):
+    b = a.bottleneck
+    if cell == "train_4k":
+        if b == "memory":
+            return ("activation traffic dominates: fuse residual+norm, "
+                    "larger microbatch when HBM allows")
+        if b == "collective":
+            return "overlap FSDP gathers with layer compute / widen TP"
+        return "MXU-bound: raise per-chip batch or reduce remat recompute"
+    if cell == "prefill_32k":
+        return ("KV/activation streaming dominates: larger attention "
+                "k-blocks, keep caches sharded on write"
+                if b == "memory" else
+                "TP activation reductions dominate: sequence-shard prefill")
+    return ("weights+cache reads are the floor: quantize weights (int8), "
+            "batch more sequences per chip" if b == "memory" else
+            "per-layer TP reductions dominate: duplicate small weights")
+
+
+def dryrun_table() -> str:
+    rows = ["| arch | cell | mesh | compile | HLO flops/chip* | temp/dev | "
+            "temp(TPU est) | args/dev | collectives present |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for arch in sorted(ARCHS):
+        cfg = get_arch(arch)
+        for cell in shp.cells_for(cfg):
+            for mesh in ("16-16", "2-16-16"):
+                art = _load(arch, cell, mesh)
+                if art is None:
+                    rows.append(f"| {arch} | {cell} | {mesh} | MISSING |")
+                    continue
+                ma = art["memory_analysis"]
+                r = art["roofline"]
+                colls = [k.replace("collective-permute", "cperm")
+                         for k, v in r["coll_by_type"].items() if v > 0]
+                rows.append(
+                    f"| {arch} | {cell} | {mesh.replace('-', 'x')} | "
+                    f"{art['compile_s']}s | {r['flops']:.2e} | "
+                    f"{ma.get('temp_size_in_bytes', 0)/2**30:.1f}G | "
+                    f"{ma.get('temp_tpu_estimate_bytes', 0)/2**30:.1f}G | "
+                    f"{ma.get('argument_size_in_bytes', 0)/2**30:.1f}G | "
+                    f"{','.join(colls) or '-'} |")
+    return "\n".join(rows)
+
+
+def roofline_table() -> str:
+    rows = ["| arch | cell | t_comp | t_mem | t_coll | bottleneck | "
+            "MODEL_FLOPS | useful/issued | MFU(roofline) | "
+            "what moves the dominant term |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    for arch in sorted(ARCHS):
+        cfg = get_arch(arch)
+        mb = MICROBATCHES.get(arch, 4)
+        for cell in shp.cells_for(cfg):
+            a = analytic_cell(cfg, cell, multi_pod=False, microbatches=mb)
+            rows.append(
+                f"| {arch} | {cell} | {_fmt_t(a.t_compute)} | "
+                f"{_fmt_t(a.t_memory)} | {_fmt_t(a.t_collective)} | "
+                f"**{a.bottleneck}** | {a.model_flops:.2e} | "
+                f"{a.useful_ratio:.2f} | {a.mfu:.3f} | "
+                f"{_advice(cfg, cell, a)} |")
+    return "\n".join(rows)
+
+
+def consistency_check() -> str:
+    """HLO-vs-analytic: HLO flops ~= one scan body; analytic per-layer
+    marginal should bracket it."""
+    lines = ["| arch/cell | HLO flops/chip | analytic issued/chip | "
+             "analytic/HLO (≈ trip count) |", "|---|---|---|---|"]
+    for arch, cell in (("internlm2-1.8b", "prefill_32k"),
+                       ("qwen3-1.7b", "decode_32k"),
+                       ("falcon-mamba-7b", "decode_32k")):
+        art = _load(arch, cell, "16-16")
+        if art is None:
+            continue
+        cfg = get_arch(arch)
+        a = analytic_cell(cfg, cell)
+        hlo = art["roofline"]["flops"]
+        lines.append(f"| {arch}/{cell} | {hlo:.2e} | "
+                     f"{a.flops_issued:.2e} | {a.flops_issued/hlo:.1f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print("## Dry-run table\n")
+    print(dryrun_table())
+    print("\n## Roofline table (single-pod 16x16)\n")
+    print(roofline_table())
+    print("\n## HLO-vs-analytic consistency\n")
+    print(consistency_check())

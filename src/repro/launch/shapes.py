@@ -1,0 +1,82 @@
+"""Assigned input-shape cells and their abstract (ShapeDtypeStruct) inputs.
+
+Per the brief: ``train_4k`` lowers ``train_step``; ``prefill_32k`` lowers
+``serve_prefill``; ``decode_32k`` / ``long_500k`` lower ``serve_decode``
+(one new token against a seq_len KV cache).  Skips (recorded in DESIGN.md
+§Arch-applicability): encoder archs have no decode step; pure
+full-attention archs skip ``long_500k``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.model import Model
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str            # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524288, 1),
+}
+
+
+def cells_for(cfg: ArchConfig) -> List[str]:
+    cells = ["train_4k", "prefill_32k"]
+    if cfg.is_encoder:
+        return cells                   # encoder-only: no decode step
+    cells.append("decode_32k")
+    if cfg.sub_quadratic:
+        cells.append("long_500k")      # quadratic-attention archs skip
+    return cells
+
+
+def _dt(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def abstract_batch(cfg: ArchConfig, cell: ShapeCell):
+    """Train/prefill batch as ShapeDtypeStructs (no allocation)."""
+    b, s = cell.global_batch, cell.seq_len
+    if cfg.is_encoder:
+        batch = {"features": jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                                  _dt(cfg))}
+        if cell.kind == "train":
+            batch["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        return batch
+    s_tok = s + 1 if cell.kind == "train" else s
+    batch = {"tokens": jax.ShapeDtypeStruct((b, s_tok), jnp.int32)}
+    if cfg.family == "vlm":
+        batch["vision"] = jax.ShapeDtypeStruct(
+            (b, cfg.vision_tokens, cfg.d_model), _dt(cfg))
+    return batch
+
+
+def abstract_decode_inputs(cfg: ArchConfig, cell: ShapeCell):
+    """(token, caches, pos) ShapeDtypeStructs for a decode cell: one new
+    token with a seq_len cache."""
+    b, s = cell.global_batch, cell.seq_len
+    model = Model(cfg)
+    caches = model.init_caches(b, s, abstract=True)
+    token = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return token, caches, pos
+
+
+def tokens_per_step(cfg: ArchConfig, cell: ShapeCell) -> int:
+    if cell.kind == "decode":
+        return cell.global_batch
+    return cell.global_batch * cell.seq_len

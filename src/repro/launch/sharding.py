@@ -1,0 +1,159 @@
+"""Sharding policies: logical-axis rules -> shape-checked PartitionSpecs.
+
+Modes:
+  * train — FSDP(+pod) × TP: params/opt-state sharded over BOTH the data
+    axes (via the 'embed' logical axis) and the model axis (vocab / heads /
+    ffn / experts / ssm-inner).  ZeRO-3-equivalent; XLA inserts per-layer
+    all-gathers inside the scan-over-layers loop.
+  * serve — TP only: params replicated over data axes (no per-step weight
+    gathers on the latency path), activations/batch over data.
+
+Every assignment is divisibility-checked against the mesh (e.g. hubert's
+vocab=504 cannot shard 16-way -> replicated) and duplicate mesh axes within
+one param are dropped.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import AttnCache
+from repro.models.param import ParamSpec
+from repro.models.ssm import SSMCache
+from .mesh import data_axes
+
+Tree = Any
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+def train_rules(mesh: Mesh) -> Dict[str, Any]:
+    fsdp = data_axes(mesh)
+    fsdp = fsdp if len(fsdp) > 1 else fsdp[0]
+    return {
+        "vocab": "model", "embed": fsdp, "qkv": "model", "kv": "model",
+        "mlp": "model", "inner": "model", "ssm_heads": "model",
+        "experts": "model", "expert_mlp": None, "layers": None,
+    }
+
+
+def serve_rules(mesh: Mesh) -> Dict[str, Any]:
+    return {
+        "vocab": "model", "embed": None, "qkv": "model", "kv": "model",
+        "mlp": "model", "inner": "model", "ssm_heads": "model",
+        "experts": "model", "expert_mlp": None, "layers": None,
+    }
+
+
+def checked_pspec(shape, axes, rules, mesh: Mesh) -> P:
+    """Apply rules with divisibility + duplicate-axis checks."""
+    used = set()
+    out = []
+    for dim, logical in zip(shape, axes):
+        assign = rules.get(logical) if logical is not None else None
+        if assign is None:
+            out.append(None)
+            continue
+        names = (assign,) if isinstance(assign, str) else tuple(assign)
+        if any(n in used for n in names) or dim % _axis_size(mesh, names):
+            out.append(None)
+            continue
+        used.update(names)
+        out.append(assign)
+    return P(*out)
+
+
+def param_pspecs(specs: Tree, rules, mesh: Mesh) -> Tree:
+    return jax.tree_util.tree_map(
+        lambda ps: checked_pspec(ps.shape, ps.axes, rules, mesh),
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def to_named(tree: Tree, mesh: Mesh) -> Tree:
+    return jax.tree_util.tree_map(
+        lambda p: NamedSharding(mesh, p), tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache shardings
+# ---------------------------------------------------------------------------
+
+def batch_pspecs(cfg: ArchConfig, batch: Dict[str, Any], mesh: Mesh,
+                 global_batch: int) -> Dict[str, P]:
+    dp = data_axes(mesh)
+    dp = dp if len(dp) > 1 else dp[0]
+    b_axis = dp if global_batch % _axis_size(mesh, dp) == 0 else None
+    out = {}
+    for k, v in batch.items():
+        out[k] = P(b_axis, *([None] * (len(v.shape) - 1)))
+    return out
+
+
+def cache_pspecs(cfg: ArchConfig, caches: Tree, mesh: Mesh, *,
+                 global_batch: int, seq_len: int) -> Tree:
+    """Shape-checked cache shardings.
+
+    Preference order per KV cache: batch over the data axes; KV heads over
+    'model' when divisible, else the sequence axis over 'model' (needed by
+    kv<TP archs like llama-90b whose 32k cache would not fit replicated).
+    For B=1 long-context decode the sequence axis additionally shards over
+    'data' (sequence parallelism).  SSM states shard their channel/head dim
+    over 'model'.
+    """
+    dp = data_axes(mesh)
+    dp = dp if len(dp) > 1 else dp[0]
+    dp_size = _axis_size(mesh, dp)
+    model_size = mesh.shape["model"]
+    b_axis = dp if global_batch % dp_size == 0 and global_batch >= dp_size \
+        else None
+    kvh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+
+    def attn_leaf(leaf_shape) -> P:
+        lead = len(leaf_shape) - 4
+        kv_ok = kvh % model_size == 0 and kvh >= model_size
+        s_axis = None
+        kv_axis = "model" if kv_ok else None
+        if not kv_ok and leaf_shape[-3] % model_size == 0:
+            s_axis = "model"
+        seq_data = None
+        if b_axis is None and leaf_shape[-3] % dp_size == 0 \
+                and s_axis != dp and dp != "model":
+            seq_data = dp   # B=1: sequence parallelism over data
+        s_final = s_axis if s_axis else seq_data
+        return P(*([None] * lead), b_axis, s_final, kv_axis, None)
+
+    def ssm_leaves(c: SSMCache):
+        conv_lead = len(c.conv.shape) - 3
+        h_lead = len(c.h.shape) - (4 if cfg.mamba_version == 2 else 3)
+        di_ok = "model" if cfg.d_inner % model_size == 0 else None
+        conv_p = P(*([None] * conv_lead), b_axis, None, di_ok)
+        if cfg.mamba_version == 2:
+            nh = cfg.d_inner // cfg.ssm_head_dim
+            nh_ok = "model" if nh % model_size == 0 else None
+            h_p = P(*([None] * h_lead), b_axis, nh_ok, None, None)
+        else:
+            h_p = P(*([None] * h_lead), b_axis, di_ok, None)
+        return SSMCache(conv=conv_p, h=h_p)
+
+    def map_cache(c):
+        if isinstance(c, AttnCache):
+            return AttnCache(k=attn_leaf(c.k.shape), v=attn_leaf(c.v.shape))
+        if isinstance(c, SSMCache):
+            return ssm_leaves(c)
+        raise TypeError(type(c))
+
+    return jax.tree_util.tree_map(
+        map_cache, caches,
+        is_leaf=lambda x: isinstance(x, (AttnCache, SSMCache)))

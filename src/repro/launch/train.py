@@ -1,0 +1,63 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+On a real pod this binary runs once per host under the cluster scheduler
+(jax.distributed.initialize picks up the pod topology); in this container
+it drives the same code path on the local device mesh.  The dry-run
+(`dryrun.py`) is the multi-pod compile proof; this launcher is the
+runnable end-to-end path (reduced configs on CPU).
+"""
+from __future__ import annotations
+
+import argparse
+import logging
+
+import jax
+
+from repro.configs import get_arch
+from repro.data.synthetic import DataConfig, SyntheticTokenStream
+from repro.launch.steps import init_train_state, make_train_step
+from repro.models.model import Model
+from repro.models.param import param_count
+from repro.optim import AdamWConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--full-size", action="store_true",
+                    help="use the full config (default: reduced())")
+    args = ap.parse_args()
+    logging.basicConfig(level=logging.INFO, format="%(message)s")
+
+    cfg = get_arch(args.arch)
+    if not args.full_size:
+        cfg = cfg.reduced().replace(dtype="float32")
+    model = Model(cfg)
+    print(f"{cfg.name}: {param_count(model.param_specs())/1e6:.1f}M params")
+
+    state = init_train_state(model, jax.random.PRNGKey(0))
+    step_fn = jax.jit(make_train_step(
+        model, AdamWConfig(lr=args.lr, total_steps=args.steps),
+        microbatches=args.microbatches))
+    data = SyntheticTokenStream(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq,
+        global_batch=args.batch))
+    trainer = Trainer(step_fn, data, TrainerConfig(
+        total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every))
+    trainer.install_signal_handlers()
+    state, step = trainer.fit(state)
+    print(f"done at step {step}; last loss "
+          f"{trainer.metrics_history[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Activation sharding hints.
+
+XLA SPMD propagation alone picks catastrophic layouts for FSDP-style
+weight shardings: measured on internlm2 train_4k, it replicated the batch
+dim and sharded heads instead (f32[256,1,4096,4096] score buffers → 81
+GiB/dev).  Explicit per-activation constraints (the MaxText discipline) pin
+batch to the data axes and heads/ffn/experts to the model axis.
+
+``hint`` is a no-op unless the launcher installs a mesh via
+``activation_mesh`` — tests and single-device code paths are unaffected.
+Every assignment is divisibility-checked, so archs whose dims don't divide
+the mesh (kv heads < TP, vocab 504, batch 1) degrade to replication
+automatically.
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+BATCH = ("pod", "data")   # logical batch axes (present subset is used)
+TP = "model"              # tensor-parallel axis
+SEQ = "data"              # sequence-parallel axis (long-context decode)
+
+_ACTIVE_MESH: Optional[object] = None
+
+
+@contextlib.contextmanager
+def activation_mesh(mesh):
+    """Install the mesh used by ``hint`` for the duration of a trace."""
+    global _ACTIVE_MESH
+    prev = _ACTIVE_MESH
+    _ACTIVE_MESH = mesh
+    try:
+        yield
+    finally:
+        _ACTIVE_MESH = prev
+
+
+def current_mesh():
+    return _ACTIVE_MESH
+
+
+def axis_size(name: str) -> int:
+    """Size of a mesh axis in the active mesh (1 when absent/no mesh)."""
+    mesh = _ACTIVE_MESH
+    if mesh is None or name not in mesh.axis_names:
+        return 1
+    return mesh.shape[name]
+
+
+def hint(x, *axes):
+    """``with_sharding_constraint`` with divisibility/duplicate checks.
+
+    ``axes`` entries: None, a mesh-axis name, or a tuple of names; entries
+    referencing axes absent from the active mesh, non-divisible dims, or
+    already-used mesh axes are dropped (replicated).
+    """
+    mesh = _ACTIVE_MESH
+    if mesh is None:
+        return x
+    assert len(axes) == x.ndim, (axes, x.shape)
+    used = set()
+    spec = []
+    for dim, a in zip(x.shape, axes):
+        if a is None:
+            spec.append(None)
+            continue
+        names = (a,) if isinstance(a, str) else tuple(a)
+        names = tuple(n for n in names if n in mesh.axis_names)
+        if not names:
+            spec.append(None)
+            continue
+        size = math.prod(mesh.shape[n] for n in names)
+        if any(n in used for n in names) or dim % size or dim < size:
+            spec.append(None)
+            continue
+        used.update(names)
+        spec.append(names[0] if len(names) == 1 else names)
+    return jax.lax.with_sharding_constraint(x, P(*spec))

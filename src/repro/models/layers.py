@@ -1,0 +1,398 @@
+"""Transformer layer library: norms, RoPE, GQA attention (+KV cache),
+MLPs, embeddings, chunked cross-entropy.
+
+Pure functions over parameter dicts built from ``param.ParamSpec`` trees.
+Compute in the config dtype (bf16 by default); normalizations, softmax and
+loss accumulate in f32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from .hints import BATCH, TP, hint
+from .param import spec
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, scale, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def rmsnorm_spec(d, name="scale"):
+    return {name: spec((d,), (None,), init="ones", dtype=jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(
+        -jnp.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, optional qk-norm, optional KV cache)
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class AttnCache:
+    k: jax.Array          # (B, S_max, kvH, hd)
+    v: jax.Array
+
+    def tree_flatten(self):
+        return (self.k, self.v), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def attention_specs(cfg: ArchConfig, *, cross: bool = False):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, kvh = cfg.num_heads, cfg.num_kv_heads
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    s = {
+        "wq": spec((d, h * hd), ("embed", "qkv"), dtype=dt),
+        "wk": spec((d, kvh * hd), ("embed", "kv"), dtype=dt),
+        "wv": spec((d, kvh * hd), ("embed", "kv"), dtype=dt),
+        "wo": spec((h * hd, d), ("qkv", "embed"), dtype=dt),
+    }
+    if cfg.qk_norm and not cross:
+        s["q_norm"] = spec((hd,), (None,), init="ones", dtype=jnp.float32)
+        s["k_norm"] = spec((hd,), (None,), init="ones", dtype=jnp.float32)
+    return s
+
+
+def _split_heads(x, n, hd):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, hd)
+
+
+def _repeat_kv(k, h, hint_heads: bool = True):
+    """Repeat KV heads up to ``h`` query heads.  Materializing the repeat
+    keeps a SINGLE head dim of size h, which shards cleanly over the TP
+    axis — the grouped 5-D formulation defeats SPMD head-sharding and
+    replicates the (Sq, Sk) score tensor (measured: +30 GiB/dev at 4k).
+
+    ``hint_heads=False`` for sequence-sharded KV caches (decode with
+    kv_heads < TP): head-hinting there forces an involuntary cache
+    rematerialization; instead the score contraction stays sequence-
+    parallel (softmax collectives are tiny at Sq=1)."""
+    kvh = k.shape[2]
+    if kvh == h:
+        return k
+    rep = jnp.repeat(k, h // kvh, axis=2)
+    if hint_heads:
+        rep = hint(rep, BATCH, None, TP, None)
+    return rep
+
+
+def _gqa_scores(q, k, scale, hint_heads: bool = True):
+    """q: (B,Sq,H,hd), k: (B,Sk,kvH,hd) -> (B,H,Sq,Sk)."""
+    k = _repeat_kv(k, q.shape[2], hint_heads)
+    return jnp.einsum("bqhd,bkhd->bhqk", q, k) * scale
+
+
+def _gqa_out(probs, v, hint_heads: bool = True):
+    b, h, sq, sk = probs.shape
+    v = _repeat_kv(v, h, hint_heads)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+    return out.reshape(b, sq, h * v.shape[-1])
+
+
+def _blocked_attention(q, k, v, *, causal: bool, scale: float,
+                       q_block: int = 1024, k_block: int = 1024):
+    """Flash-style blocked attention (pure JAX, scan-of-scan).
+
+    Never materializes the (Sq, Sk) score matrix — peak per-step buffers
+    are (B, kvH, G, q_block, k_block).  Required for the 32k-prefill cells
+    (an unblocked 32k x 32k score tensor is ~TBs).
+
+    q: (B,Sq,H,hd); k/v: (B,Sk,kvH,hd) (repeated to H inside).
+    """
+    b, sq, h, hd = q.shape
+    k = _repeat_kv(k, h)
+    v = _repeat_kv(v, h)
+    sk = k.shape[1]
+    qb = min(q_block, sq)
+    kb = min(k_block, sk)
+    # Ragged tails (e.g. 6400 vision tokens): pad keys/queries up to a
+    # block multiple; padded keys are masked out, padded queries sliced off.
+    sq_real, sk_real = sq, sk
+    q_pad, k_pad = (-sq) % qb, (-sk) % kb
+    if q_pad:
+        q = jnp.pad(q, ((0, 0), (0, q_pad), (0, 0), (0, 0)))
+        sq += q_pad
+    if k_pad:
+        k = jnp.pad(k, ((0, 0), (0, k_pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, k_pad), (0, 0), (0, 0)))
+        sk += k_pad
+    nq, nk = sq // qb, sk // kb
+
+    qs = jnp.moveaxis(q.reshape(b, nq, qb, h, hd), 1, 0)
+    ks = jnp.moveaxis(k.reshape(b, nk, kb, h, hd), 1, 0)
+    vs = jnp.moveaxis(v.reshape(b, nk, kb, h, hd), 1, 0)
+
+    def q_step(_, qi_with_idx):
+        qi, iq = qi_with_idx
+        m0 = jnp.full((b, h, qb), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, h, qb), jnp.float32)
+        a0 = jnp.zeros((b, h, qb, hd), jnp.float32)
+
+        def k_step(carry, kj_with_idx):
+            m, l, acc = carry
+            kj, vj, jk = kj_with_idx
+            s = jnp.einsum("bqhd,bkhd->bhqk", qi, kj).astype(jnp.float32)
+            s = s * scale
+            kpos = jk * kb + jnp.arange(kb)
+            msk = (kpos < sk_real)[None, :]
+            if causal:
+                qpos = iq * qb + jnp.arange(qb)
+                msk = msk & (qpos[:, None] >= kpos[None, :])
+            s = jnp.where(msk[None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(-1))
+            corr = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l = l * corr + p.sum(-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(qi.dtype), vj).astype(jnp.float32)
+            return (m_new, l, acc), None
+
+        (m, l, acc), _ = jax.lax.scan(
+            k_step, (m0, l0, a0), (ks, vs, jnp.arange(nk)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        out = jnp.moveaxis(out, 2, 1)                     # (B,qb,H,hd)
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, (qs, jnp.arange(nq)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, sq, h * hd)
+    return out[:, :sq_real]
+
+
+BLOCKED_ATTN_THRESHOLD = 4096  # use flash-style blocking only above 4k
+
+
+def attention(p, x, cfg: ArchConfig, *, positions, causal: bool = True,
+              cache: Optional[AttnCache] = None,
+              cache_pos=None,
+              kv_x: Optional[jax.Array] = None,
+              return_kv: bool = False,
+              kv_cache_len: Optional[int] = None,
+              use_rope: bool = True):
+    """Self- or cross-attention.
+
+    Modes:
+      * full-sequence (train / prefill): ``cache=None``.  With
+        ``return_kv=True`` also returns an ``AttnCache`` padded to
+        ``kv_cache_len`` (prefill).
+      * decode: ``cache`` + ``cache_pos`` given, x has S=1; k/v written at
+        ``cache_pos``; attends over positions <= cache_pos.
+      * static-cache cross-attention: ``cache`` given, ``cache_pos=None`` —
+        attends over the whole cache, no update (vision KV at decode).
+      * cross-attention from ``kv_x`` (no causal mask, no RoPE).
+    """
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    scale = hd ** -0.5
+
+    # Cached attention with kv_heads < TP runs SEQUENCE-parallel (cache
+    # sharded on S, heads replicated): head-hinting q or the kv-repeat
+    # there pushes a partial kv-head sharding through the score einsum and
+    # SPMD "involuntarily rematerializes" (replicates) the cache.
+    from .hints import axis_size
+    kv_on_heads = kvh % axis_size(TP) == 0 and kvh >= axis_size(TP)
+    seq_parallel_cache = cache is not None and not kv_on_heads
+
+    q = _split_heads(x @ p["wq"], h, hd)
+    if not seq_parallel_cache:
+        q = hint(q, BATCH, None, TP, None)
+    if cfg.qk_norm and "q_norm" in p:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+    if use_rope and kv_x is None:
+        q = rope(q, positions, cfg.rope_theta)
+
+    if cache is not None and cache_pos is None:
+        # Static cache (cross-attention at decode): full visibility.
+        scores = _gqa_scores(q, cache.k, scale, hint_heads=kv_on_heads)
+        if seq_parallel_cache:
+            scores = hint(scores, BATCH, None, None, TP)
+        probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1
+                               ).astype(x.dtype)
+        out = _gqa_out(probs, cache.v, hint_heads=kv_on_heads)
+        return out @ p["wo"], cache
+
+    src = kv_x if kv_x is not None else x
+    k = _split_heads(src @ p["wk"], kvh, hd)
+    v = _split_heads(src @ p["wv"], kvh, hd)
+    if cache is None:
+        k = hint(k, BATCH, None, TP, None)
+        v = hint(v, BATCH, None, TP, None)
+    if cfg.qk_norm and "k_norm" in p:
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    if use_rope and kv_x is None:
+        k = rope(k, positions, cfg.rope_theta)
+
+    if cache is not None:
+        # Decode: write this token's k/v at the (per-slot) position and
+        # attend over each slot's visible prefix.  ``cache_pos`` is ()
+        # (aligned decode / dry-run) or (B,) (continuous batching).
+        b = x.shape[0]
+        pos_arr = jnp.asarray(cache_pos, jnp.int32)
+        pos_vec = jnp.broadcast_to(pos_arr.reshape(-1) if pos_arr.ndim
+                                   else pos_arr, (b,))
+        bidx = jnp.arange(b)
+        k_cache = cache.k.at[bidx, pos_vec].set(k[:, 0])
+        v_cache = cache.v.at[bidx, pos_vec].set(v[:, 0])
+        # Pin the updated cache to the layout it arrives in (kv-heads over
+        # TP when divisible, else sequence over TP).
+        if kv_on_heads:
+            k_cache = hint(k_cache, BATCH, None, TP, None)
+            v_cache = hint(v_cache, BATCH, None, TP, None)
+        else:   # sequence-parallel cache (kv heads < TP)
+            k_cache = hint(k_cache, BATCH, TP, None, None)
+            v_cache = hint(v_cache, BATCH, TP, None, None)
+        scores = _gqa_scores(q, k_cache, scale, hint_heads=kv_on_heads)
+        if seq_parallel_cache:
+            scores = hint(scores, BATCH, None, None, TP)
+        keymask = jnp.arange(k_cache.shape[1])[None, :] <= pos_vec[:, None]
+        scores = jnp.where(keymask[:, None, None, :], scores, -1e30)
+        probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1
+                               ).astype(x.dtype)
+        out = _gqa_out(probs, v_cache, hint_heads=kv_on_heads)
+        return out @ p["wo"], AttnCache(k=k_cache, v=v_cache)
+
+    sq, sk = q.shape[1], k.shape[1]
+    if max(sq, sk) > BLOCKED_ATTN_THRESHOLD:
+        out = _blocked_attention(q, k, v, causal=causal and kv_x is None,
+                                 scale=scale, q_block=cfg.attn_q_block,
+                                 k_block=cfg.attn_k_block)
+    else:
+        scores = _gqa_scores(q, k, scale)                   # (B,kvH,G,Sq,Sk)
+        if causal and kv_x is None:
+            mask = jnp.tril(jnp.ones((sq, sk), bool), k=sk - sq)
+            scores = jnp.where(mask[None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1
+                               ).astype(x.dtype)
+        out = _gqa_out(probs, v)
+
+    new_cache = None
+    if return_kv:
+        pad_to = kv_cache_len or sk
+        if pad_to > sk:
+            zk = jnp.zeros((k.shape[0], pad_to - sk, kvh, hd), k.dtype)
+            k, v = (jnp.concatenate([k, zk], 1),
+                    jnp.concatenate([v, zk], 1))
+        new_cache = AttnCache(k=k, v=v)
+    return out @ p["wo"], new_cache
+
+
+def init_attn_cache(cfg: ArchConfig, batch: int, max_len: int, dtype,
+                    abstract: bool = False):
+    kvh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    mk = (jax.ShapeDtypeStruct if abstract else
+          lambda s, d: jnp.zeros(s, d))
+    return AttnCache(k=mk((batch, max_len, kvh, hd), dtype),
+                     v=mk((batch, max_len, kvh, hd), dtype))
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_specs(cfg: ArchConfig, d_ff: Optional[int] = None):
+    d = cfg.d_model
+    f = d_ff if d_ff is not None else cfg.d_ff
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    if cfg.mlp_type == "swiglu":
+        return {
+            "w_gate": spec((d, f), ("embed", "mlp"), dtype=dt),
+            "w_up": spec((d, f), ("embed", "mlp"), dtype=dt),
+            "w_down": spec((f, d), ("mlp", "embed"), dtype=dt),
+        }
+    return {
+        "w_up": spec((d, f), ("embed", "mlp"), dtype=dt),
+        "w_down": spec((f, d), ("mlp", "embed"), dtype=dt),
+    }
+
+
+def mlp(p, x, cfg: ArchConfig):
+    if cfg.mlp_type == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    else:
+        h = jax.nn.gelu(x @ p["w_up"])
+    h = hint(h, BATCH, None, TP)
+    return h @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding + LM head + chunked cross-entropy
+# ---------------------------------------------------------------------------
+
+def embed_specs(cfg: ArchConfig):
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    return {
+        "embedding": spec((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                          dtype=dt, scale=1.0),
+        "head": spec((cfg.d_model, cfg.vocab_size), ("embed", "vocab"),
+                     dtype=dt),
+    }
+
+
+def embed(p, tokens):
+    return jnp.take(p["embedding"], tokens, axis=0)
+
+
+def logits(p, x):
+    return x @ p["head"]
+
+
+def chunked_softmax_xent(p, x, labels, *, chunk: int = 512,
+                         label_mask=None) -> jax.Array:
+    """Mean token cross-entropy, scanned over sequence chunks so the
+    (B, S, V) logits tensor is never materialized (peak is (B, chunk, V));
+    essential for 150k-vocab archs at seq 4k."""
+    b, s, d = x.shape
+    chunk = min(chunk, s)
+    n_chunks = s // chunk
+    assert s % chunk == 0, (s, chunk)
+    head = p["head"]
+    if label_mask is None:
+        label_mask = jnp.ones((b, s), bool)
+
+    xcs = x.reshape(b, n_chunks, chunk, d).swapaxes(0, 1)
+    lcs = labels.reshape(b, n_chunks, chunk).swapaxes(0, 1)
+    mcs = label_mask.reshape(b, n_chunks, chunk).swapaxes(0, 1)
+
+    @jax.checkpoint   # backward recomputes per-chunk logits (never stored)
+    def body(carry, inp):
+        xc, lc, mc = inp
+        lg = hint((xc @ head).astype(jnp.float32), BATCH, None, TP)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, lc[..., None], axis=-1)[..., 0]
+        nll = jnp.where(mc, lse - gold, 0.0)
+        return (carry[0] + nll.sum(), carry[1] + mc.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0), jnp.int32(0)),
+                                 (xcs, lcs, mcs))
+    return tot / jnp.maximum(cnt, 1)

@@ -1,0 +1,448 @@
+"""Unified model builder: one ``Model`` class drives all six families
+(dense / encoder / ssm / hybrid / moe / vlm) from an ``ArchConfig``.
+
+Layers are stacked and scanned (``jax.lax.scan``) so the HLO stays compact
+for 100-layer archs; the layer body is rematerialized (``jax.checkpoint``)
+in training.  Caches are pytrees with a leading layer axis scanned along
+with the parameters.
+
+Three entry points per model (what the dry-run lowers):
+  * ``loss_fn(params, batch)``        — train forward + mean token xent.
+  * ``prefill(params, batch)``        — full-sequence forward, returns the
+                                        last-position logits + caches.
+  * ``decode_step(params, token, caches, pos)`` — one token w/ caches.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from . import layers as L
+from .hints import BATCH, hint
+from . import moe as M
+from .quant import dequant_tree
+from . import ssm as S
+from .param import ParamSpec, abstract_params, init_params, spec
+
+Tree = Any
+
+
+def _dt(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def stack_specs(tree: Tree, n: int) -> Tree:
+    """Add a leading scanned 'layers' axis to every spec in the tree."""
+    return jax.tree_util.tree_map(
+        lambda ps: ParamSpec((n,) + ps.shape, ps.dtype,
+                             ("layers",) + ps.axes, ps.init, ps.scale),
+        tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def _block_specs(cfg: ArchConfig) -> Tree:
+    """One decoder block: attn + (mlp | moe)."""
+    s: Dict[str, Tree] = {
+        "attn_norm": spec((cfg.d_model,), (None,), init="ones",
+                          dtype=jnp.float32),
+        "attn": L.attention_specs(cfg),
+        "mlp_norm": spec((cfg.d_model,), (None,), init="ones",
+                         dtype=jnp.float32),
+    }
+    if cfg.family == "moe":
+        s["moe"] = M.moe_specs(cfg)
+    else:
+        s["mlp"] = L.mlp_specs(cfg)
+    return s
+
+
+def _ssm_block_specs(cfg: ArchConfig) -> Tree:
+    mk = S.mamba2_specs if cfg.mamba_version == 2 else S.mamba1_specs
+    return {
+        "norm": spec((cfg.d_model,), (None,), init="ones", dtype=jnp.float32),
+        "mamba": mk(cfg),
+    }
+
+
+def _cross_block_specs(cfg: ArchConfig) -> Tree:
+    return {
+        "attn_norm": spec((cfg.d_model,), (None,), init="ones",
+                          dtype=jnp.float32),
+        "attn": L.attention_specs(cfg, cross=True),
+        "mlp_norm": spec((cfg.d_model,), (None,), init="ones",
+                         dtype=jnp.float32),
+        "mlp": L.mlp_specs(cfg),
+        "gate_attn": spec((1,), (None,), init="zeros", dtype=jnp.float32),
+        "gate_mlp": spec((1,), (None,), init="zeros", dtype=jnp.float32),
+    }
+
+
+class Model:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------------
+    # Parameter specs
+    # ------------------------------------------------------------------
+    def param_specs(self) -> Tree:
+        cfg = self.cfg
+        specs: Dict[str, Tree] = {
+            "final_norm": spec((cfg.d_model,), (None,), init="ones",
+                               dtype=jnp.float32),
+        }
+        if cfg.family == "encoder":
+            specs["head"] = spec((cfg.d_model, cfg.vocab_size),
+                                 ("embed", "vocab"), dtype=_dt(cfg))
+            specs["layers"] = stack_specs(_block_specs(cfg), cfg.num_layers)
+            return specs
+
+        specs["embed"] = L.embed_specs(cfg)
+        if cfg.family in ("dense", "moe"):
+            specs["layers"] = stack_specs(_block_specs(cfg), cfg.num_layers)
+        elif cfg.family == "ssm":
+            specs["layers"] = stack_specs(_ssm_block_specs(cfg),
+                                          cfg.num_layers)
+        elif cfg.family == "hybrid":
+            specs["layers"] = stack_specs(_ssm_block_specs(cfg),
+                                          cfg.num_layers)
+            specs["shared"] = _block_specs(cfg)          # ONE shared block
+        elif cfg.family == "vlm":
+            n_cross = cfg.num_layers // cfg.cross_attn_every
+            n_self = cfg.num_layers - n_cross
+            specs["layers"] = stack_specs(_block_specs(cfg), n_self)
+            specs["cross_layers"] = stack_specs(_cross_block_specs(cfg),
+                                                n_cross)
+        else:
+            raise ValueError(cfg.family)
+        return specs
+
+    def init(self, key) -> Tree:
+        return init_params(self.param_specs(), key)
+
+    def abstract_params(self) -> Tree:
+        return abstract_params(self.param_specs())
+
+    # ------------------------------------------------------------------
+    # Blocks
+    # ------------------------------------------------------------------
+    def _block(self, p, x, *, positions, causal, cache=None, cache_pos=None,
+               kv_cache_len=None, return_kv=False):
+        """Standard transformer block (dense/moe/encoder + hybrid shared)."""
+        cfg = self.cfg
+        p = dequant_tree(p)      # int8-serving: materialize ONE layer
+        x = hint(x, BATCH, None, None)
+        h, new_cache = L.attention(
+            p["attn"], L.rmsnorm(x, p["attn_norm"], cfg.norm_eps), cfg,
+            positions=positions, causal=causal, cache=cache,
+            cache_pos=cache_pos, kv_cache_len=kv_cache_len,
+            return_kv=return_kv)
+        x = x + h
+        hi = L.rmsnorm(x, p["mlp_norm"], cfg.norm_eps)
+        if "moe" in p:
+            out, aux = M.moe(p["moe"], hi, cfg)
+        else:
+            out, aux = L.mlp(p["mlp"], hi, cfg), jnp.float32(0)
+        return x + out, new_cache, aux
+
+    def _ssm_block(self, p, x, cache=None):
+        cfg = self.cfg
+        p = dequant_tree(p)      # int8-serving: materialize ONE layer
+        x = hint(x, BATCH, None, None)
+        fn = S.mamba2 if cfg.mamba_version == 2 else S.mamba1
+        h, new_cache = fn(p["mamba"], L.rmsnorm(x, p["norm"], cfg.norm_eps),
+                          cfg, cache=cache)
+        return x + h, new_cache
+
+    def _cross_block(self, p, x, vision_kv, *, positions):
+        """VLM cross-attention block (gated, llama-3.2 style).
+
+        ``vision_kv`` is either raw vision embeddings (B, Vt, d) at
+        train/prefill or a static AttnCache at decode."""
+        cfg = self.cfg
+        p = dequant_tree(p)      # int8-serving: materialize ONE layer
+        if isinstance(vision_kv, L.AttnCache):
+            h, kv = L.attention(p["attn"],
+                                L.rmsnorm(x, p["attn_norm"], cfg.norm_eps),
+                                cfg, positions=positions, causal=False,
+                                cache=vision_kv, cache_pos=None)
+        else:
+            h, kv = L.attention(p["attn"],
+                                L.rmsnorm(x, p["attn_norm"], cfg.norm_eps),
+                                cfg, positions=positions, causal=False,
+                                kv_x=vision_kv, return_kv=True)
+        x = x + jnp.tanh(p["gate_attn"]).astype(x.dtype) * h
+        out = L.mlp(p["mlp"], L.rmsnorm(x, p["mlp_norm"], cfg.norm_eps), cfg)
+        x = x + jnp.tanh(p["gate_mlp"]).astype(x.dtype) * out
+        return x, kv
+
+    # ------------------------------------------------------------------
+    # Forward (shared by train / prefill / decode)
+    # ------------------------------------------------------------------
+    def _forward(self, params, x, *, positions, caches=None, cache_pos=None,
+                 kv_cache_len=None, return_caches=False, remat=False,
+                 vision=None):
+        """x: (B, S, d) embedded inputs -> (hidden, new_caches, aux)."""
+        cfg = self.cfg
+        causal = not cfg.is_encoder
+        decode = caches is not None and cache_pos is not None
+
+        if cfg.family in ("dense", "moe", "encoder"):
+            def step(x, lp, cache):
+                x, nc, aux = self._block(
+                    lp, x, positions=positions, causal=causal, cache=cache,
+                    cache_pos=cache_pos, kv_cache_len=kv_cache_len,
+                    return_kv=return_caches)
+                return x, (nc, aux)
+
+            x, (new_caches, auxs) = _scan_blocks(step, x, params["layers"],
+                                                 caches, remat)
+            return x, new_caches, jnp.sum(auxs)
+
+        if cfg.family == "ssm":
+            def step(x, lp, cache):
+                x, nc = self._ssm_block(lp, x, cache)
+                return x, nc
+
+            x, new_caches = _scan_blocks(step, x, params["layers"], caches,
+                                         remat)
+            return x, new_caches, jnp.float32(0)
+
+        if cfg.family == "hybrid":
+            return self._forward_hybrid(
+                params, x, positions=positions, caches=caches,
+                cache_pos=cache_pos, kv_cache_len=kv_cache_len,
+                return_caches=return_caches, remat=remat)
+
+        if cfg.family == "vlm":
+            return self._forward_vlm(
+                params, x, positions=positions, caches=caches,
+                cache_pos=cache_pos, kv_cache_len=kv_cache_len,
+                return_caches=return_caches, remat=remat, vision=vision)
+
+        raise ValueError(cfg.family)
+
+    def _forward_hybrid(self, params, x, *, positions, caches, cache_pos,
+                        kv_cache_len, return_caches, remat):
+        """Zamba2-style: groups of `attn_every` mamba2 layers, each followed
+        by ONE SHARED attention+MLP block; trailing mamba layers last."""
+        cfg = self.cfg
+        g = cfg.attn_every
+        n_groups = cfg.num_layers // g
+        n_main = n_groups * g
+        shared = params["shared"]
+
+        main = jax.tree_util.tree_map(
+            lambda a: a[:n_main].reshape(n_groups, g, *a.shape[1:]),
+            params["layers"])
+        tail = jax.tree_util.tree_map(lambda a: a[n_main:], params["layers"])
+
+        if caches is None:
+            ssm_main = ssm_tail = attn_caches = None
+        else:
+            ssm_main, ssm_tail, attn_caches = caches
+
+        def inner_step(x, lp, cache):
+            x, nc = self._ssm_block(lp, x, cache)
+            return x, nc
+
+        def group_step(x, gp, gcaches):
+            gssm, gattn = gcaches if gcaches is not None else (None, None)
+            x, new_ssm = _scan_blocks(inner_step, x, gp, gssm, remat)
+            x, new_attn, _ = self._block(
+                shared, x, positions=positions, causal=True, cache=gattn,
+                cache_pos=cache_pos, kv_cache_len=kv_cache_len,
+                return_kv=return_caches)
+            return x, (new_ssm, new_attn)
+
+        # Nested (sqrt-L) remat: group boundaries AND layer bodies are both
+        # checkpointed — residuals saved per group, recompute per layer.
+        group_caches = None if ssm_main is None else (ssm_main, attn_caches)
+        x, (new_ssm_main, new_attn) = _scan_blocks(
+            group_step, x, main, group_caches, remat=remat)
+        x, new_ssm_tail = _scan_blocks(inner_step, x, tail, ssm_tail, remat)
+        return x, (new_ssm_main, new_ssm_tail, new_attn), jnp.float32(0)
+
+    def _forward_vlm(self, params, x, *, positions, caches, cache_pos,
+                     kv_cache_len, return_caches, remat, vision):
+        """Llama-3.2-vision style: every `cross_attn_every`-th block is a
+        gated cross-attention block over vision embeddings."""
+        cfg = self.cfg
+        e = cfg.cross_attn_every
+        n_cross = cfg.num_layers // e
+        g = e - 1                                    # self layers per group
+
+        grouped = jax.tree_util.tree_map(
+            lambda a: a.reshape(n_cross, g, *a.shape[1:]), params["layers"])
+
+        if caches is None:
+            self_caches = cross_caches = None
+        else:
+            self_caches, cross_caches = caches
+        vision_src = cross_caches if cross_caches is not None else vision
+
+        def inner_step(x, lp, cache):
+            x, nc, _ = self._block(
+                lp, x, positions=positions, causal=True, cache=cache,
+                cache_pos=cache_pos, kv_cache_len=kv_cache_len,
+                return_kv=return_caches)
+            return x, nc
+
+        def group_step(x, gp_pair, gcaches):
+            gp, cp = gp_pair
+            gself, gcross = gcaches if gcaches is not None else (None, None)
+            x, new_self = _scan_blocks(inner_step, x, gp, gself, remat)
+            vsrc = gcross if gcross is not None else vision
+            x, new_cross = self._cross_block(cp, x, vsrc,
+                                             positions=positions)
+            return x, (new_self, new_cross)
+
+        # Nested (sqrt-L) remat — see _forward_hybrid.
+        group_caches = (None if self_caches is None
+                        else (self_caches, cross_caches))
+        x, (new_self, new_cross) = _scan_blocks(
+            group_step, x, (grouped, params["cross_layers"]), group_caches,
+            remat=remat)
+        return x, (new_self, new_cross), jnp.float32(0)
+
+    # ------------------------------------------------------------------
+    # Train loss
+    # ------------------------------------------------------------------
+    def loss_fn(self, params, batch, *, remat: bool = True):
+        cfg = self.cfg
+        if cfg.family == "encoder":
+            x = batch["features"].astype(_dt(cfg))
+            labels = batch["labels"]
+            b, s = labels.shape
+            positions = jnp.arange(s)[None]
+            hidden, _, aux = self._forward(params, x, positions=positions,
+                                           remat=remat)
+            hidden = L.rmsnorm(hidden, params["final_norm"], cfg.norm_eps)
+            loss = L.chunked_softmax_xent({"head": params["head"]}, hidden,
+                                          labels)
+            return loss, {"xent": loss}
+
+        tokens = batch["tokens"]
+        inputs, labels = tokens[:, :-1], tokens[:, 1:]
+        b, s = inputs.shape
+        positions = jnp.arange(s)[None]
+        x = L.embed(params["embed"], inputs).astype(_dt(cfg))
+        vision = batch.get("vision")
+        if vision is not None:
+            vision = vision.astype(_dt(cfg))
+        hidden, _, aux = self._forward(params, x, positions=positions,
+                                       remat=remat, vision=vision)
+        hidden = L.rmsnorm(hidden, params["final_norm"], cfg.norm_eps)
+        xent = L.chunked_softmax_xent(params["embed"], hidden, labels)
+        loss = xent + 0.01 * aux
+        return loss, {"xent": xent, "aux": aux}
+
+    # ------------------------------------------------------------------
+    # Serving
+    # ------------------------------------------------------------------
+    def prefill(self, params, batch, *, kv_cache_len: Optional[int] = None):
+        """Full-sequence forward; returns (last_logits, caches)."""
+        cfg = self.cfg
+        if cfg.family == "encoder":
+            x = batch["features"].astype(_dt(cfg))
+            s = x.shape[1]
+            positions = jnp.arange(s)[None]
+            hidden, _, _ = self._forward(params, x, positions=positions)
+            hidden = L.rmsnorm(hidden, params["final_norm"], cfg.norm_eps)
+            return hidden @ params["head"], None
+
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        positions = jnp.arange(s)[None]
+        embed_p = dequant_tree(params["embed"])
+        x = L.embed(embed_p, tokens).astype(_dt(cfg))
+        vision = batch.get("vision")
+        if vision is not None:
+            vision = vision.astype(_dt(cfg))
+        hidden, caches, _ = self._forward(
+            params, x, positions=positions, return_caches=True,
+            kv_cache_len=kv_cache_len or s, vision=vision)
+        hidden = L.rmsnorm(hidden[:, -1:], params["final_norm"], cfg.norm_eps)
+        return L.logits(embed_p, hidden), caches
+
+    def decode_step(self, params, token, caches, pos):
+        """token: (B, 1) int32; pos: () or (B,) int32 (per-slot positions,
+        continuous batching) — returns (logits, caches)."""
+        cfg = self.cfg
+        assert cfg.family != "encoder", "encoder archs have no decode step"
+        b = token.shape[0]
+        pos = jnp.asarray(pos, jnp.int32)
+        pos_vec = jnp.broadcast_to(pos.reshape(-1) if pos.ndim else pos, (b,))
+        positions = pos_vec[:, None]
+        embed_p = dequant_tree(params["embed"])
+        x = L.embed(embed_p, token).astype(_dt(cfg))
+        hidden, new_caches, _ = self._forward(
+            params, x, positions=positions, caches=caches, cache_pos=pos)
+        hidden = L.rmsnorm(hidden, params["final_norm"], cfg.norm_eps)
+        return L.logits(embed_p, hidden), new_caches
+
+    # ------------------------------------------------------------------
+    # Cache construction
+    # ------------------------------------------------------------------
+    def init_caches(self, batch: int, max_len: int, *, abstract=False):
+        cfg = self.cfg
+        dt = _dt(cfg)
+
+        def attn_cache():
+            return L.init_attn_cache(cfg, batch, max_len, dt,
+                                     abstract=abstract)
+
+        def ssm_cache():
+            if abstract:
+                return S.abstract_ssm_cache(cfg, batch, dt)
+            return S.init_ssm_cache(cfg, batch, dt)
+
+        def stack(tree, n):
+            def add_dim(x):
+                if isinstance(x, jax.ShapeDtypeStruct):
+                    return jax.ShapeDtypeStruct((n,) + x.shape, x.dtype)
+                return jnp.broadcast_to(x[None], (n,) + x.shape)
+            return jax.tree_util.tree_map(add_dim, tree)
+
+        if cfg.family in ("dense", "moe", "encoder"):
+            return stack(attn_cache(), cfg.num_layers)
+        if cfg.family == "ssm":
+            return stack(ssm_cache(), cfg.num_layers)
+        if cfg.family == "hybrid":
+            g = cfg.attn_every
+            n_groups = cfg.num_layers // g
+            n_tail = cfg.num_layers - n_groups * g
+            return (stack(stack(ssm_cache(), g), n_groups),
+                    stack(ssm_cache(), n_tail),
+                    stack(attn_cache(), n_groups))
+        if cfg.family == "vlm":
+            e = cfg.cross_attn_every
+            n_cross = cfg.num_layers // e
+            g = e - 1
+            vt = cfg.vision_tokens
+            cross = L.init_attn_cache(cfg, batch, vt, dt, abstract=abstract)
+            return (stack(stack(attn_cache(), g), n_cross),
+                    stack(cross, n_cross))
+        raise ValueError(cfg.family)
+
+
+def _scan_blocks(step, x, params_stack, caches, remat: bool):
+    """``lax.scan`` over stacked layer params (and caches, when given).
+
+    ``step(x, layer_params, cache_or_None) -> (x, y)``.
+    """
+    if caches is None:
+        def body(c, lp):
+            return step(c, lp, None)
+        xs = params_stack
+    else:
+        def body(c, inp):
+            lp, cache = inp
+            return step(c, lp, cache)
+        xs = (params_stack, caches)
+    if remat:
+        body = jax.checkpoint(body)
+    return jax.lax.scan(body, x, xs)

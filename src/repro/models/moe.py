@@ -1,0 +1,161 @@
+"""Mixture-of-Experts layer whose token dispatch IS the OpSparse binning.
+
+Routing T tokens × top-k to E experts is the paper's two-pass binning
+problem (DESIGN.md §4): histogram per-expert counts, exclusive-sum offsets,
+stable counting-sort scatter of assignment ids into one flat array
+(`core.binning.bin_by_id`).  The dispatch/combine are then sparse
+gather/segment operations (the ESC accumulator's discipline) rather than
+the dense one-hot einsum of reference MoE implementations — the dense
+variant is kept as ``moe_dense_dispatch`` and benchmarked against it in
+``benchmarks/bench_moe_dispatch.py``.
+
+Experts are evaluated as grouped matmuls on an (E, C, d) capacity buffer —
+MXU-friendly; E shards over the 'model' mesh axis (expert parallelism).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.binning import bin_by_id
+from .hints import BATCH, TP, hint
+from .param import spec
+
+
+def moe_specs(cfg: ArchConfig):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    return {
+        "router": spec((d, e), ("embed", None), dtype=jnp.float32),
+        "w_gate": spec((e, d, f), ("experts", "embed", "expert_mlp"), dtype=dt),
+        "w_up": spec((e, d, f), ("experts", "embed", "expert_mlp"), dtype=dt),
+        "w_down": spec((e, f, d), ("experts", "expert_mlp", "embed"), dtype=dt),
+    }
+
+
+def _capacity(cfg: ArchConfig, tokens: int) -> int:
+    cap = int(tokens * cfg.experts_per_token * cfg.moe_capacity_factor
+              / cfg.num_experts)
+    return max(8, -(-cap // 8) * 8)  # multiple of 8 (sublane alignment)
+
+
+def route(p, x_flat, cfg: ArchConfig):
+    """Router: top-k experts + normalized weights + load-balance aux loss."""
+    logits = x_flat.astype(jnp.float32) @ p["router"]       # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, experts = jax.lax.top_k(probs, cfg.experts_per_token)
+    weights = weights / jnp.maximum(
+        weights.sum(-1, keepdims=True), 1e-9)               # (T, k)
+    # Switch-style aux loss: E * sum_e fraction_e * mean_prob_e
+    e = cfg.num_experts
+    counts = jnp.zeros(e, jnp.float32).at[experts.reshape(-1)].add(1.0)
+    frac = counts / jnp.maximum(counts.sum(), 1.0)
+    aux = e * jnp.sum(frac * probs.mean(0))
+    return weights, experts, aux
+
+
+def moe(p, x, cfg: ArchConfig) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out, aux_loss).  GROUP-LOCAL binning dispatch.
+
+    Each sequence is a dispatch group (the paper's thread-block analog):
+    ``bin_by_id`` runs vmapped per group, so every gather/scatter index is
+    group-local — SPMD shards the batched scatters over the data axes
+    without the giant cross-shard index tensors a flat (B·S·k) dispatch
+    induces (measured: −45 GiB/dev on olmoe train_4k), and capacity is
+    per-group, which is how pod-scale MoE actually balances load.
+    """
+    b, s, d = x.shape
+    k, e = cfg.experts_per_token, cfg.num_experts
+    cap = _capacity(cfg, s)                                 # per group
+    x = hint(x, BATCH, None, None)
+
+    weights, experts, aux = route(p, x.reshape(b * s, d), cfg)
+    weights = weights.reshape(b, s, k)
+    assign = experts.reshape(b, s * k)                      # (B, S*k)
+
+    # --- OpSparse two-pass binning, one instance per group ---------------
+    order, counts, offsets = jax.vmap(
+        lambda ids: bin_by_id(ids, e))(assign)
+    sorted_e = jnp.take_along_axis(assign, order, axis=1)
+    pos_in_e = jnp.arange(s * k, dtype=jnp.int32)[None] - \
+        jnp.take_along_axis(offsets, sorted_e, axis=1)
+    keep = pos_in_e < cap                                   # capacity drop
+    slot = jnp.where(keep, sorted_e * cap + pos_in_e, e * cap)
+    token_of = order // k                                   # (B, S*k) < S
+
+    # Dispatch: group-local gather + batched scatter into (B, E*C, d).
+    gathered = jnp.take_along_axis(
+        x, token_of[..., None].astype(jnp.int32), axis=1)   # (B, S*k, d)
+    quant = cfg.moe_dispatch_dtype == "int8"
+    if quant:
+        # Per-token symmetric int8 quantization of the dispatch payload:
+        # the buffer crossing the expert-parallel axis carries int8 + one
+        # f32 scale per slot instead of bf16 — ~2x less ICI traffic on the
+        # dominant MoE collective (see EXPERIMENTS.md §Perf).
+        g32 = gathered.astype(jnp.float32)
+        g_scale = jnp.maximum(jnp.max(jnp.abs(g32), axis=-1,
+                                      keepdims=True) / 127.0, 1e-12)
+        gathered = jnp.clip(jnp.round(g32 / g_scale), -127,
+                            127).astype(jnp.int8)
+        scale_buf = jax.vmap(
+            lambda sc, sl: jnp.zeros((e * cap, 1), jnp.float32)
+            .at[sl].set(sc, mode="drop"))(g_scale, slot)
+    buf = jax.vmap(
+        lambda g, sl: jnp.zeros((e * cap, d), g.dtype).at[sl].set(
+            g, mode="drop"))(gathered, slot)
+    hidden = hint(buf.reshape(b, e, cap, d), BATCH, TP, None, None)
+    if quant:
+        scales = hint(scale_buf.reshape(b, e, cap, 1), BATCH, TP, None, None)
+        hidden = (hidden.astype(jnp.float32) * scales).astype(x.dtype)
+
+    # Expert FFN (swiglu) — per-expert matmuls on the MXU, E over 'model'.
+    gate = jax.nn.silu(jnp.einsum("becd,edf->becf", hidden, p["w_gate"]))
+    up = jnp.einsum("becd,edf->becf", hidden, p["w_up"])
+    out_buf = jnp.einsum("becf,efd->becd", gate * up, p["w_down"])
+    out_flat = hint(out_buf.reshape(b, e * cap, d), BATCH, None, None)
+
+    # Combine: gather outputs back per assignment, weight, segment-sum.
+    safe_slot = jnp.minimum(slot, e * cap - 1)
+    contrib = jnp.take_along_axis(out_flat, safe_slot[..., None], axis=1)
+    contrib = jnp.where(keep[..., None], contrib, 0)
+    w_sorted = jnp.take_along_axis(
+        weights.reshape(b, s * k), order, axis=1)[..., None].astype(x.dtype)
+    out = jax.vmap(
+        lambda t_of, c: jnp.zeros((s, d), x.dtype).at[t_of].add(c))(
+        token_of, contrib * w_sorted)
+    out = hint(out, BATCH, None, None)
+    return out, aux
+
+
+def moe_dense_dispatch(p, x, cfg: ArchConfig) -> Tuple[jax.Array, jax.Array]:
+    """Reference dense one-hot dispatch (GShard-style einsum) — the
+    baseline the binning dispatch is benchmarked against."""
+    b, s, d = x.shape
+    t = b * s
+    k, e = cfg.experts_per_token, cfg.num_experts
+    cap = _capacity(cfg, t)
+    x_flat = x.reshape(t, d)
+    weights, experts, aux = route(p, x_flat, cfg)
+
+    onehot = jax.nn.one_hot(experts, e, dtype=jnp.float32)  # (T, k, E)
+    # rank of each (token, slot) within its expert — cumsum over the
+    # FLATTENED (T*k) assignment axis so different k-slots never collide
+    flat = onehot.reshape(t * k, e)
+    pos_f = jnp.cumsum(flat, axis=0) - flat
+    pos = jnp.einsum("tke,tke->tk", pos_f.reshape(t, k, e), onehot)
+    keep = pos < cap
+    pos_oh = jax.nn.one_hot(jnp.where(keep, pos, cap), cap,
+                            dtype=jnp.float32)              # (T, k, C)
+    disp = jnp.einsum("tke,tkc->tec", onehot, pos_oh)       # (T, E, C)
+    hidden = jnp.einsum("tec,td->ecd", disp, x_flat.astype(jnp.float32)
+                        ).astype(x.dtype)
+    gate = jax.nn.silu(jnp.einsum("ecd,edf->ecf", hidden, p["w_gate"]))
+    up = jnp.einsum("ecd,edf->ecf", hidden, p["w_up"])
+    out_buf = jnp.einsum("ecf,efd->ecd", gate * up, p["w_down"])
+    comb = jnp.einsum("tke,tkc,tk->tec", onehot, pos_oh,
+                      weights.astype(jnp.float32))
+    out = jnp.einsum("tec,ecd->td", comb, out_buf.astype(jnp.float32))
+    return out.astype(x.dtype).reshape(b, s, d), aux

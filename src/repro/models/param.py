@@ -1,0 +1,79 @@
+"""Parameter-spec machinery: one source of truth for shapes, dtypes and
+LOGICAL sharding axes.
+
+Every model builds a tree of ``ParamSpec`` (shape, dtype, logical axes).
+From that single tree we derive:
+  * materialized parameters (``init_params``),
+  * ShapeDtypeStructs for the dry-run (``abstract_params`` — no allocation),
+  * ``PartitionSpec`` trees via logical-axis rules (``partition_specs``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    dtype: Any
+    axes: Tuple[Optional[str], ...]   # logical axis name per dim (or None)
+    init: str = "normal"              # "normal" | "zeros" | "ones"
+    scale: float = 1.0                # stddev multiplier for "normal"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def spec(shape, axes, dtype=jnp.bfloat16, init="normal", scale=1.0) -> ParamSpec:
+    return ParamSpec(tuple(int(s) for s in shape), dtype, tuple(axes), init,
+                     scale)
+
+
+def _materialize(ps: ParamSpec, key) -> jax.Array:
+    if ps.init == "zeros":
+        return jnp.zeros(ps.shape, ps.dtype)
+    if ps.init == "ones":
+        return jnp.ones(ps.shape, ps.dtype)
+    fan_in = ps.shape[0] if len(ps.shape) > 1 else max(ps.shape[0], 1)
+    std = ps.scale / math.sqrt(fan_in)
+    return (jax.random.normal(key, ps.shape, jnp.float32) * std).astype(ps.dtype)
+
+
+def init_params(specs, key) -> Any:
+    """Materialize a spec tree into parameter arrays."""
+    leaves, treedef = jax.tree_util.tree_flatten(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(key, len(leaves))
+    vals = [_materialize(ps, k) for ps, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def abstract_params(specs) -> Any:
+    """ShapeDtypeStruct tree — the dry-run's zero-allocation parameters."""
+    return jax.tree_util.tree_map(
+        lambda ps: jax.ShapeDtypeStruct(ps.shape, ps.dtype),
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def partition_specs(specs, rules: Dict[str, Optional[str | Tuple[str, ...]]]):
+    """Logical axes -> PartitionSpec via a rules dict (e.g. {"mlp": "model"}).
+
+    Unknown logical names map to None (replicated).
+    """
+    def one(ps: ParamSpec):
+        return P(*[rules.get(a) if a is not None else None for a in ps.axes])
+
+    return jax.tree_util.tree_map(
+        one, specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def param_count(specs) -> int:
+    leaves = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    return sum(math.prod(ps.shape) for ps in leaves)

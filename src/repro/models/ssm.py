@@ -1,0 +1,277 @@
+"""Mamba1 (selective scan) and Mamba2 (SSD, chunked dual form) layers.
+
+TPU adaptation: the recurrence is computed CHUNKED over time — a sequential
+``lax.scan`` over chunks carrying the SSM state, with a parallel
+(associative-scan / matmul-dual) computation inside each chunk.  This keeps
+the HBM-materialized state tensor at (B, chunk, ...) instead of (B, L, ...)
+and turns the inner work into VPU/MXU-friendly batched ops.
+
+  * Mamba1: per-channel state (d_inner, N).  In-chunk: associative scan.
+  * Mamba2: per-head scalar decay (SSD).  In-chunk: the quadratic dual form
+    (attention-like masked matmuls) + state carry — MXU-dominated.
+
+Decode is a single-step state update (O(1) per token — why the long_500k
+cell runs for ssm/hybrid archs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from .hints import BATCH, TP, hint
+from .param import spec
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SSMCache:
+    conv: jax.Array    # (B, K-1, d_inner) — causal-conv tail
+    h: jax.Array       # mamba1: (B, d_inner, N); mamba2: (B, nH, P, N)
+
+    def tree_flatten(self):
+        return (self.conv, self.h), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+# ---------------------------------------------------------------------------
+# Shared: causal depthwise conv (kernel K) as shift-and-sum (shard-friendly)
+# ---------------------------------------------------------------------------
+
+def _causal_conv(x, w, b, tail: Optional[jax.Array] = None):
+    """x: (B, L, D); w: (K, D); returns (B, L, D) and the new tail.
+
+    tail: (B, K-1, D) previous inputs (decode/prefill continuation).
+    """
+    k = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    ext = jnp.concatenate([tail, x], axis=1)          # (B, L+K-1, D)
+    out = sum(ext[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(k))
+    new_tail = ext[:, -(k - 1):, :]
+    return out + b[None, None, :], new_tail
+
+
+def _pad_chunks(q: int, x, dt, Bmat, Cmat):
+    """Pad the time axis to a multiple of ``q`` with IDENTITY transitions:
+    dt=0 gives dA=exp(0)=1 and dBx=0, so the carried state is untouched by
+    padded steps; padded outputs are sliced off by the caller."""
+    L = x.shape[1]
+    pad = (-L) % q
+    if pad:
+        padt = lambda t: jnp.pad(
+            t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        x, dt, Bmat, Cmat = map(padt, (x, dt, Bmat, Cmat))
+    return x, dt, Bmat, Cmat, (L + pad) // q
+
+
+# ---------------------------------------------------------------------------
+# Mamba1
+# ---------------------------------------------------------------------------
+
+def mamba1_specs(cfg: ArchConfig):
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    dt_rank = max(d // 16, 1)
+    k = cfg.ssm_conv
+    bt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    return {
+        "in_proj": spec((d, 2 * di), ("embed", "inner"), dtype=bt),
+        "conv_w": spec((k, di), (None, "inner"), dtype=bt, scale=0.5),
+        "conv_b": spec((di,), ("inner",), init="zeros", dtype=bt),
+        "x_proj": spec((di, dt_rank + 2 * n), ("inner", None), dtype=bt),
+        "dt_proj": spec((dt_rank, di), (None, "inner"), dtype=bt),
+        "dt_bias": spec((di,), ("inner",), init="zeros", dtype=jnp.float32),
+        "A_log": spec((di, n), ("inner", None), init="zeros", dtype=jnp.float32),
+        "D": spec((di,), ("inner",), init="ones", dtype=jnp.float32),
+        "out_proj": spec((di, d), ("inner", "embed"), dtype=bt),
+    }
+
+
+def _mamba1_scan_chunk(h, dA, dBx, C):
+    """One chunk: h (B,D,N); dA/dBx (B,Q,D,N); C (B,Q,N) -> (h', y)."""
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    a_pref, b_pref = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+    hs = a_pref * h[:, None] + b_pref                    # (B,Q,D,N)
+    y = jnp.einsum("bqdn,bqn->bqd", hs, C)
+    return hs[:, -1], y
+
+
+def mamba1(p, u, cfg: ArchConfig, cache: Optional[SSMCache] = None
+           ) -> Tuple[jax.Array, Optional[SSMCache]]:
+    """u: (B, L, d_model).  cache given => decode (L == 1)."""
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    dt_rank = max(d // 16, 1)
+    bsz, L, _ = u.shape
+
+    xz = u @ p["in_proj"]
+    x, z = jnp.split(xz, 2, axis=-1)
+    x = hint(x, BATCH, None, TP)
+    z = hint(z, BATCH, None, TP)
+    tail = cache.conv if cache is not None else None
+    x, new_tail = _causal_conv(x, p["conv_w"], p["conv_b"], tail)
+    x = jax.nn.silu(x)
+
+    proj = x @ p["x_proj"]
+    dt_raw = proj[..., :dt_rank]
+    Bmat = proj[..., dt_rank:dt_rank + n].astype(jnp.float32)
+    Cmat = proj[..., dt_rank + n:].astype(jnp.float32)
+    dt = hint(jax.nn.softplus(
+        (dt_raw @ p["dt_proj"]).astype(jnp.float32) + p["dt_bias"]),
+        BATCH, None, TP)
+    A = -jnp.exp(p["A_log"])                             # (D, N)
+    xf = x.astype(jnp.float32)
+
+    if cache is not None:                                # decode: one step
+        dA = jnp.exp(dt[:, 0, :, None] * A[None])        # (B,D,N)
+        dBx = (dt[:, 0, :, None] * Bmat[:, 0, None, :]
+               * xf[:, 0, :, None])
+        h = cache.h * dA + dBx
+        y = jnp.einsum("bdn,bn->bd", h, Cmat[:, 0])[:, None]
+        y = y + xf * p["D"][None, None]
+        out = (y.astype(u.dtype) * jax.nn.silu(z)) @ p["out_proj"]
+        return out, SSMCache(conv=new_tail, h=h)
+
+    q = min(cfg.ssm_chunk, L)
+    # Ragged tail: pad with identity transitions (dt=0 -> dA=1, dBx=0).
+    xf, dt, Bmat, Cmat, nc = _pad_chunks(q, xf, dt, Bmat, Cmat)
+
+    def chunk_step(h, inp):
+        xq, dtq, bq, cq = inp                            # (B,Q,...)
+        dA = jnp.exp(dtq[..., None] * A[None, None])     # (B,Q,D,N)
+        dBx = dtq[..., None] * bq[:, :, None, :] * xq[..., None]
+        h, y = _mamba1_scan_chunk(h, dA, dBx, cq)
+        return h, y
+
+    rs = lambda t: t.reshape(bsz, nc, q, *t.shape[2:]).swapaxes(0, 1)
+    h0 = cache.h if cache is not None else jnp.zeros((bsz, di, n), jnp.float32)
+    hL, ys = jax.lax.scan(chunk_step, h0,
+                          (rs(xf), rs(dt), rs(Bmat), rs(Cmat)))
+    y = ys.swapaxes(0, 1).reshape(bsz, nc * q, di)[:, :L]
+    y = y + xf[:, :L] * p["D"][None, None]
+    out = (y.astype(u.dtype) * jax.nn.silu(z)) @ p["out_proj"]
+    return out, SSMCache(conv=new_tail, h=hL)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD)
+# ---------------------------------------------------------------------------
+
+def mamba2_specs(cfg: ArchConfig):
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    nh = di // cfg.ssm_head_dim
+    k = cfg.ssm_conv
+    bt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    return {
+        "in_proj": spec((d, 2 * di), ("embed", "inner"), dtype=bt),
+        "conv_w": spec((k, di), (None, "inner"), dtype=bt, scale=0.5),
+        "conv_b": spec((di,), ("inner",), init="zeros", dtype=bt),
+        "bc_proj": spec((di, 2 * n), ("inner", None), dtype=bt),
+        "dt_proj": spec((di, nh), ("inner", "ssm_heads"), dtype=bt),
+        "dt_bias": spec((nh,), ("ssm_heads",), init="zeros", dtype=jnp.float32),
+        "A_log": spec((nh,), ("ssm_heads",), init="zeros", dtype=jnp.float32),
+        "D": spec((nh,), ("ssm_heads",), init="ones", dtype=jnp.float32),
+        "out_proj": spec((di, d), ("inner", "embed"), dtype=bt),
+    }
+
+
+def mamba2(p, u, cfg: ArchConfig, cache: Optional[SSMCache] = None
+           ) -> Tuple[jax.Array, Optional[SSMCache]]:
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    ph = cfg.ssm_head_dim
+    nh = di // ph
+    bsz, L, _ = u.shape
+
+    xz = u @ p["in_proj"]
+    x, z = jnp.split(xz, 2, axis=-1)
+    x = hint(x, BATCH, None, TP)
+    z = hint(z, BATCH, None, TP)
+    tail = cache.conv if cache is not None else None
+    x, new_tail = _causal_conv(x, p["conv_w"], p["conv_b"], tail)
+    x = jax.nn.silu(x)
+
+    bc = x @ p["bc_proj"]
+    Bmat = bc[..., :n].astype(jnp.float32)               # (B,L,N)
+    Cmat = bc[..., n:].astype(jnp.float32)
+    dt = jax.nn.softplus(
+        (x @ p["dt_proj"]).astype(jnp.float32) + p["dt_bias"])  # (B,L,nh)
+    a = -jnp.exp(p["A_log"])                             # (nh,)
+    xh = hint(x.astype(jnp.float32).reshape(bsz, L, nh, ph),
+              BATCH, None, TP, None)
+
+    if cache is not None:                                # decode step
+        dtq = dt[:, 0]                                   # (B,nh)
+        da = jnp.exp(dtq * a[None])                      # (B,nh)
+        dBx = jnp.einsum("bh,bn,bhp->bhpn", dtq, Bmat[:, 0], xh[:, 0])
+        h = cache.h * da[..., None, None] + dBx
+        y = jnp.einsum("bhpn,bn->bhp", h, Cmat[:, 0])
+        y = y + xh[:, 0] * p["D"][None, :, None]
+        y = y.reshape(bsz, 1, di)
+        out = (y.astype(u.dtype) * jax.nn.silu(z)) @ p["out_proj"]
+        return out, SSMCache(conv=new_tail, h=h)
+
+    q = min(cfg.ssm_chunk, L)
+    xh, dt, Bmat, Cmat, nc = _pad_chunks(q, xh, dt, Bmat, Cmat)
+
+    def chunk_step(h, inp):
+        xq, dtq, bq, cq = inp                            # (B,Q,·)
+        la = dtq * a[None, None]                         # (B,Q,nh) log-decay
+        cum = jnp.cumsum(la, axis=1)                     # (B,Q,nh)
+        # Intra-chunk dual form: masked attention-like matmul.
+        g = jnp.einsum("bqn,bsn->bqs", cq, bq)           # (B,Q,Q)
+        dec = jnp.exp(cum[:, :, None] - cum[:, None, :])  # (B,Q,S,nh)
+        tri = jnp.tril(jnp.ones((q, q), bool))
+        mmat = jnp.where(tri[None, :, :, None],
+                         g[..., None] * dec * dtq[:, None], 0.0)
+        y_intra = jnp.einsum("bqsh,bshp->bqhp", mmat, xq)
+        # Inter-chunk: contribution of the carried state.
+        y_inter = jnp.einsum("bqn,bhpn->bqhp", cq, h) * \
+            jnp.exp(cum).transpose(0, 1, 2)[..., None]
+        # State update.
+        tail_dec = jnp.exp(cum[:, -1:, :] - cum)         # (B,Q,nh)
+        dbx = jnp.einsum("bsh,bsn,bshp->bhpn", tail_dec * dtq, bq, xq)
+        h = h * jnp.exp(cum[:, -1])[:, :, None, None] + dbx
+        return h, y_intra + y_inter
+
+    rs = lambda t: t.reshape(bsz, nc, q, *t.shape[2:]).swapaxes(0, 1)
+    h0 = cache.h if cache is not None else \
+        jnp.zeros((bsz, nh, ph, n), jnp.float32)
+    hL, ys = jax.lax.scan(chunk_step, h0,
+                          (rs(xh), rs(dt), rs(Bmat), rs(Cmat)))
+    y = ys.swapaxes(0, 1).reshape(bsz, nc * q, nh, ph)[:, :L]
+    y = y + xh[:, :L] * p["D"][None, None, :, None]
+    y = y.reshape(bsz, L, di)
+    out = (y.astype(u.dtype) * jax.nn.silu(z)) @ p["out_proj"]
+    return out, SSMCache(conv=new_tail, h=hL)
+
+
+def init_ssm_cache(cfg: ArchConfig, batch: int, dtype):
+    di, n = cfg.d_inner, cfg.ssm_state
+    k = cfg.ssm_conv
+    if cfg.mamba_version == 2:
+        nh = di // cfg.ssm_head_dim
+        h = jnp.zeros((batch, nh, cfg.ssm_head_dim, n), jnp.float32)
+    else:
+        h = jnp.zeros((batch, di, n), jnp.float32)
+    return SSMCache(conv=jnp.zeros((batch, k - 1, di), dtype), h=h)
+
+
+def abstract_ssm_cache(cfg: ArchConfig, batch: int, dtype):
+    di, n = cfg.d_inner, cfg.ssm_state
+    k = cfg.ssm_conv
+    if cfg.mamba_version == 2:
+        nh = di // cfg.ssm_head_dim
+        h = jax.ShapeDtypeStruct((batch, nh, cfg.ssm_head_dim, n), jnp.float32)
+    else:
+        h = jax.ShapeDtypeStruct((batch, di, n), jnp.float32)
+    return SSMCache(conv=jax.ShapeDtypeStruct((batch, k - 1, di), dtype), h=h)

@@ -1,0 +1,118 @@
+"""Batched serving engine: slot-based continuous batching over the model's
+prefill/decode steps.
+
+Requests queue up; the engine owns ``max_batch`` decode slots with a
+shared KV/SSM cache of ``max_len``.  Each slot tracks its own position —
+``decode_step`` takes a PER-SLOT position vector, so sequences of
+different lengths decode together and a finished slot is refilled from
+the queue without draining the batch (continuous batching).  Prefill runs
+one request at a time into its slot (chunked prefill for long prompts is
+the model's blocked-attention path).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.model import Model
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray               # (len,) int32
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, model: Model, params, *, max_batch: int = 4,
+                 max_len: int = 256):
+        assert not model.cfg.is_encoder, "encoder archs do not serve decode"
+        self.model = model
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.queue: deque[Request] = deque()
+        self.slots: List[Optional[Request]] = [None] * max_batch
+        self.pos = np.zeros(max_batch, np.int32)        # per-slot position
+        self.caches = model.init_caches(max_batch, max_len)
+        self.last_token = np.zeros((max_batch, 1), np.int32)
+        self._decode = jax.jit(model.decode_step)
+        self._prefill_one = jax.jit(
+            lambda p, b: model.prefill(p, b, kv_cache_len=max_len))
+
+    # -- public API ---------------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def run(self, max_steps: int = 1000) -> Dict[int, List[int]]:
+        """Drive until queue + slots drain (or step budget)."""
+        results: Dict[int, List[int]] = {}
+        for _ in range(max_steps):
+            self._fill_slots()
+            if not any(s is not None for s in self.slots):
+                break
+            self._decode_once(results)
+        return results
+
+    # -- internals ----------------------------------------------------------
+    def _fill_slots(self):
+        for i in range(self.max_batch):
+            if self.slots[i] is None and self.queue:
+                req = self.queue.popleft()
+                self._prefill_into_slot(i, req)
+
+    def _prefill_into_slot(self, i: int, req: Request):
+        plen = len(req.prompt)
+        assert plen < self.max_len
+        batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None]}
+        logits, caches = self._prefill_one(self.params, batch)
+        tok = int(jnp.argmax(logits[0, -1]))
+        self._write_slot_cache(i, caches)
+        self.slots[i] = req
+        self.pos[i] = plen
+        self.last_token[i, 0] = tok
+        req.output.append(tok)
+
+    def _write_slot_cache(self, i: int, caches):
+        """Copy a 1-sequence prefill cache into batch slot i."""
+        def copy(dst, src):
+            # batch dim differs between attn (B at -4) and ssm leaves; the
+            # 1-sized dim of src aligned with dst's max_batch dim is B.
+            for ax, (ds, ss) in enumerate(zip(dst.shape, src.shape)):
+                if ds == self.max_batch and ss == 1:
+                    return jax.lax.dynamic_update_slice_in_dim(
+                        dst, src.astype(dst.dtype), i, axis=ax)
+            raise ValueError((dst.shape, src.shape))
+
+        self.caches = jax.tree_util.tree_map(copy, self.caches, caches)
+
+    def _decode_once(self, results: Dict[int, List[int]]):
+        pos = jnp.asarray(self.pos, jnp.int32)
+        tok = jnp.asarray(self.last_token, jnp.int32)
+        logits, self.caches = self._decode(
+            self.params, tok, self.caches, pos)
+        next_np = np.asarray(jnp.argmax(logits[:, -1], axis=-1))[:, None]
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            t = int(next_np[i, 0])
+            req.output.append(t)
+            self.pos[i] += 1
+            self.last_token[i, 0] = t
+            hit_eos = req.eos_id is not None and t == req.eos_id
+            if len(req.output) >= req.max_new_tokens or hit_eos or \
+                    self.pos[i] >= self.max_len - 1:
+                req.done = True
+                results[req.uid] = req.output
+                self.slots[i] = None
+        return results

@@ -1,0 +1,9 @@
+import os
+
+# Keep tests on the single real CPU device (the 512-device override is
+# reserved for launch/dryrun.py, per the brief).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_threefry_partitionable", True)

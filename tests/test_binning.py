@@ -1,0 +1,99 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (bin_rows, bin_rows_for_ladder, bin_rows_identity,
+                        classify, make_ladder, numeric_ladder, symbolic_ladder)
+from repro.core.binning_ranges import (NUMERIC_NOMINAL, SYMBOLIC_NOMINAL,
+                                       NUMERIC_SWEEP, SYMBOLIC_SWEEP)
+
+
+def test_paper_table1_symbolic_ranges():
+    """Table 1 of the paper: sym_1.2x upper bounds must match exactly."""
+    lad = symbolic_ladder(1.2)
+    assert lad.upper == (26, 426, 853, 1706, 3413, 6826, 10240, 20480)
+
+
+def test_paper_table2_numeric_ranges():
+    """Table 2: num_2x upper bounds 16/128/256/512/1024/2048/4096."""
+    lad = numeric_ladder(2.0)
+    assert lad.upper == (16, 128, 256, 512, 1024, 2048, 4096)
+
+
+def test_paper_table4_sym_sweep_ranges():
+    """Table 4: sym_1x and sym_1.5x range grids."""
+    assert symbolic_ladder(1.0).upper == (32, 512, 1024, 2048, 4096, 8192,
+                                          12288, 24576)
+    assert symbolic_ladder(1.5).upper == (21, 341, 682, 1365, 2730, 5461,
+                                          8192, 16384)
+
+
+def test_classify_first_admitting_rung():
+    upper = (4, 16, 64)
+    sizes = jnp.array([0, 4, 5, 16, 17, 64, 65, 1000])
+    got = np.asarray(classify(sizes, upper))
+    np.testing.assert_array_equal(got, [0, 0, 1, 1, 2, 2, 3, 3])
+
+
+def test_bin_rows_partition_and_order():
+    sizes = jnp.array([3, 100, 7, 0, 50, 2, 9, 700], jnp.int32)
+    lad = make_ladder((8, 64), 1.0)
+    b = bin_rows(sizes, upper=lad.upper, num_bins=lad.num_bins)
+    bins = np.asarray(b.bins)
+    # bins is a permutation of all row ids (the paper's min-metadata claim)
+    np.testing.assert_array_equal(np.sort(bins), np.arange(8))
+    # per-bin membership respects the ranges; in-bin order is stable (by id)
+    np.testing.assert_array_equal(np.asarray(b.bin_size), [4, 2, 2])
+    np.testing.assert_array_equal(np.asarray(b.bin_offset), [0, 4, 6])
+    np.testing.assert_array_equal(bins[:4], [0, 2, 3, 5])
+    np.testing.assert_array_equal(bins[4:6], [4, 6])
+    np.testing.assert_array_equal(bins[6:], [1, 7])
+    assert int(b.max_size) == 700
+
+
+def test_fast_path_identity():
+    """Alg 3: all rows fit bin0 -> bins == identity, pass 2 skipped."""
+    sizes = jnp.full((10,), 3, jnp.int32)
+    lad = make_ladder((8, 64), 1.0)
+    b = bin_rows_for_ladder(sizes, lad)
+    np.testing.assert_array_equal(np.asarray(b.bins), np.arange(10))
+    np.testing.assert_array_equal(np.asarray(b.bin_size), [10, 0, 0])
+
+
+def test_fast_path_not_taken_when_large_row():
+    sizes = jnp.array([3, 3, 100], jnp.int32)
+    lad = make_ladder((8, 64), 1.0)
+    b = bin_rows_for_ladder(sizes, lad)
+    assert int(b.bin_size[2]) == 1  # fallback rung used
+
+
+def test_rows_of_bin_padding():
+    sizes = jnp.array([1, 100, 1], jnp.int32)
+    lad = make_ladder((8, 64), 1.0)
+    b = bin_rows_for_ladder(sizes, lad)
+    rows, cnt = b.rows_of_bin(0, capacity=8)
+    assert int(cnt) == 2
+    np.testing.assert_array_equal(np.asarray(rows)[:2], [0, 2])
+
+
+@pytest.mark.parametrize("mult", SYMBOLIC_SWEEP)
+def test_sym_sweep_ladders_constructible(mult):
+    lad = symbolic_ladder(mult)
+    assert len(lad.upper) == len(SYMBOLIC_NOMINAL)
+    assert all(u <= t for u, t in zip(lad.upper, lad.table_sizes))
+
+
+@pytest.mark.parametrize("mult", NUMERIC_SWEEP)
+def test_num_sweep_ladders_constructible(mult):
+    lad = numeric_ladder(mult)
+    assert len(lad.upper) == len(NUMERIC_NOMINAL)
+    # numeric tables are nominal-1 (paper keeps 4B for shared_offset);
+    # ranges are computed from the nominal pow2 sizes
+    assert all(u <= t + 1 for u, t in zip(lad.upper, lad.table_sizes))
+
+
+def test_vmem_extended_ladder():
+    lad = symbolic_ladder(1.2, vmem_extended=True)
+    assert lad.table_sizes[-1] == 1048576
+    assert lad.fallback_threshold() == int(1048576 / 1.2)

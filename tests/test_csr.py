@@ -1,0 +1,75 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CSR, random_csr
+from repro.core.csr import gather_rows
+
+
+def test_from_dense_round_trip():
+    rng = np.random.default_rng(0)
+    d = rng.standard_normal((17, 23)).astype(np.float32)
+    d[rng.random((17, 23)) < 0.7] = 0.0
+    A = CSR.from_dense(d)
+    np.testing.assert_allclose(np.asarray(A.to_dense()), d)
+    assert int(A.nnz()) == (d != 0).sum()
+
+
+def test_row_ids_and_mask():
+    d = np.zeros((4, 5), np.float32)
+    d[0, 1] = 1.0
+    d[0, 3] = 2.0
+    d[2, 0] = 3.0
+    A = CSR.from_dense(d)
+    np.testing.assert_array_equal(np.asarray(A.row_ids()), [0, 0, 2])
+    np.testing.assert_array_equal(np.asarray(A.nnz_per_row()), [2, 0, 1, 0])
+
+
+def test_padding_preserves_semantics():
+    d = np.eye(6, dtype=np.float32)
+    A = CSR.from_dense(d).with_capacity(32)
+    assert A.capacity == 32
+    np.testing.assert_allclose(np.asarray(A.to_dense()), d)
+    assert int(A.entry_mask().sum()) == 6
+
+
+def test_empty_rows_and_empty_matrix():
+    d = np.zeros((5, 5), np.float32)
+    A = CSR.from_dense(d).with_capacity(8)
+    np.testing.assert_allclose(np.asarray(A.to_dense()), d)
+    assert int(A.nnz()) == 0
+
+
+def test_random_csr_respects_limits():
+    A = random_csr(jax.random.PRNGKey(0), 50, 40, avg_nnz_per_row=4.0,
+                   max_nnz_per_row=9)
+    per_row = np.asarray(A.nnz_per_row())
+    assert per_row.max() <= 9
+    col = np.asarray(A.col)
+    rpt = np.asarray(A.rpt)
+    for i in range(50):  # sorted, in-range columns
+        seg = col[rpt[i]:rpt[i + 1]]
+        assert (np.diff(seg) > 0).all()
+        assert seg.size == 0 or (seg >= 0).all() and (seg < 40).all()
+
+
+def test_gather_rows():
+    A = random_csr(jax.random.PRNGKey(1), 30, 20, avg_nnz_per_row=3.0)
+    rows = jnp.array([5, 2, 29, 7], jnp.int32)
+    valid = jnp.array([True, True, True, False])
+    sub = gather_rows(A, rows, valid)
+    dense = np.asarray(A.to_dense())
+    got = np.asarray(sub.to_dense())
+    np.testing.assert_allclose(got[0], dense[5])
+    np.testing.assert_allclose(got[1], dense[2])
+    np.testing.assert_allclose(got[2], dense[29])
+    np.testing.assert_allclose(got[3], 0.0)
+
+
+def test_csr_is_pytree():
+    A = random_csr(jax.random.PRNGKey(2), 8, 8, avg_nnz_per_row=2.0)
+    leaves = jax.tree_util.tree_leaves(A)
+    assert len(leaves) == 3
+    B = jax.tree_util.tree_map(lambda x: x, A)
+    assert B.shape == A.shape

@@ -1,0 +1,29 @@
+"""Integration: the multi-pod dry-run CLI compiles a real cell end-to-end
+(subprocess — the 512-device override must precede jax init)."""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+@pytest.mark.slow
+def test_dryrun_cli_single_cell(tmp_path):
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "qwen3-1.7b", "--shape", "decode_32k", "--mesh", "single"],
+        capture_output=True, text=True, timeout=420,
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin",
+             "HOME": "/tmp", "JAX_PLATFORMS": "cpu"},
+        cwd=REPO)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "[ok] qwen3-1.7b|decode_32k|16x16" in proc.stdout
+    art = json.loads(
+        (REPO / "results/dryrun/qwen3-1.7b_decode_32k_16-16.json")
+        .read_text())
+    assert art["chips"] == 256
+    assert art["roofline"]["flops"] > 0
+    assert art["memory_analysis"]["temp_size_in_bytes"] > 0

@@ -1,0 +1,61 @@
+"""Sweeps for the binning-histogram and BSR-SpMM Pallas kernels."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bin_rows, symbolic_ladder
+from repro.kernels import ref as kref
+from repro.kernels.binning_pallas import binning_histogram
+from repro.kernels.bsr_spmm import bsr_spmm
+
+
+@pytest.mark.parametrize("m", [7, 256, 1000, 4096])
+@pytest.mark.parametrize("block", [128, 1024])
+def test_binning_histogram_matches_reference(m, block):
+    lad = symbolic_ladder(1.2)
+    sizes = jax.random.randint(jax.random.PRNGKey(m), (m,), 0, 30000)
+    hist, mx = binning_histogram(sizes, upper=lad.upper,
+                                 num_bins=lad.num_bins, block=block)
+    ref = bin_rows(sizes, upper=lad.upper, num_bins=lad.num_bins)
+    np.testing.assert_array_equal(np.asarray(hist),
+                                  np.asarray(ref.bin_size))
+    assert int(mx) == int(ref.max_size)
+
+
+def _random_bcsr(key, nbr, nbc, bm, bk, density=0.3):
+    rng = np.random.default_rng(int(jax.random.bits(key, dtype=jnp.uint32)))
+    mask = rng.random((nbr, nbc)) < density
+    mask[0, 0] = True                      # at least one block
+    rows, cols = np.nonzero(mask)
+    blocks = rng.standard_normal((len(rows), bm, bk)).astype(np.float32)
+    return (jnp.asarray(rows, jnp.int32), jnp.asarray(cols, jnp.int32),
+            jnp.asarray(blocks))
+
+
+@pytest.mark.parametrize("shape", [(3, 4, 8, 16, 32), (5, 2, 16, 8, 8),
+                                   (2, 2, 32, 32, 64)])
+def test_bsr_spmm_matches_reference(shape):
+    nbr, nbc, bm, bk, n = shape
+    rows, cols, blocks = _random_bcsr(jax.random.PRNGKey(0), nbr, nbc,
+                                      bm, bk)
+    dense = jax.random.normal(jax.random.PRNGKey(1), (nbc * bk, n))
+    got = bsr_spmm(rows, cols, blocks, dense, n_block_rows=nbr)
+    ref = kref.bsr_spmm_ref(rows, cols, blocks, dense, nrows_blocks=nbr,
+                            block_shape=(bm, bk))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_bsr_spmm_with_padding_blocks():
+    """Padding entries (repeat last row, zero block) contribute nothing."""
+    rows = jnp.asarray([0, 0, 1, 1, 1], jnp.int32)
+    cols = jnp.asarray([0, 1, 1, 0, 0], jnp.int32)
+    blocks = jnp.stack([jnp.eye(8)] * 3 + [jnp.eye(8)] +
+                       [jnp.zeros((8, 8))])
+    dense = jax.random.normal(jax.random.PRNGKey(2), (16, 24))
+    got = bsr_spmm(rows, cols, blocks, dense, n_block_rows=2)
+    ref = kref.bsr_spmm_ref(rows, cols, blocks, dense, nrows_blocks=2,
+                            block_shape=(8, 8))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=1e-5,
+                               atol=1e-5)

@@ -1,0 +1,125 @@
+"""Hypothesis property tests on the system's core invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st, HealthCheck
+
+from repro.core import (CSR, SpgemmConfig, bin_rows, bin_rows_for_ladder,
+                        make_ladder, spgemm)
+from repro.core.binning import bin_by_id
+from repro.models import moe as M
+
+SETTINGS = dict(max_examples=20, deadline=None,
+                suppress_health_check=[HealthCheck.too_slow])
+
+
+@st.composite
+def sparse_matrix(draw, max_dim=24):
+    m = draw(st.integers(1, max_dim))
+    n = draw(st.integers(1, max_dim))
+    density = draw(st.floats(0.0, 0.5))
+    seed = draw(st.integers(0, 2 ** 16))
+    rng = np.random.default_rng(seed)
+    d = rng.standard_normal((m, n)).astype(np.float32)
+    d[rng.random((m, n)) >= density] = 0.0
+    return d
+
+
+@given(sparse_matrix(), st.integers(0, 2 ** 16))
+@settings(**SETTINGS)
+def test_csr_dense_round_trip(d, _):
+    A = CSR.from_dense(d)
+    np.testing.assert_allclose(np.asarray(A.to_dense()), d)
+
+
+@given(sparse_matrix(), sparse_matrix())
+@settings(**SETTINGS)
+def test_spgemm_matches_dense_oracle(da, db):
+    # make shapes compatible
+    k = min(da.shape[1], db.shape[0])
+    da, db = da[:, :k], db[:k, :]
+    if k == 0:
+        return
+    A, B = CSR.from_dense(da), CSR.from_dense(db)
+    res = spgemm(A, B, SpgemmConfig(method="esc"))
+    np.testing.assert_allclose(np.asarray(res.C.to_dense()), da @ db,
+                               rtol=1e-4, atol=1e-4)
+    # two-phase invariant: rpt non-decreasing, nnz consistent
+    rpt = np.asarray(res.C.rpt)
+    assert (np.diff(rpt) >= 0).all()
+    assert rpt[-1] == res.total_nnz
+
+
+@given(st.lists(st.integers(0, 10_000), min_size=1, max_size=200))
+@settings(**SETTINGS)
+def test_binning_is_partition(sizes):
+    """bins is always a permutation; members respect their rung ranges."""
+    sizes = jnp.asarray(sizes, jnp.int32)
+    lad = make_ladder((8, 64, 512), 1.2)
+    b = bin_rows_for_ladder(sizes, lad)
+    bins = np.asarray(b.bins)
+    np.testing.assert_array_equal(np.sort(bins), np.arange(len(sizes)))
+    sizes_np = np.asarray(sizes)
+    bounds = list(lad.upper)
+    bin_of = np.asarray(b.bin_of_row)
+    for i, s in enumerate(sizes_np):
+        k = bin_of[i]
+        lo = bounds[k - 1] if k > 0 else -1
+        hi = bounds[k] if k < len(bounds) else np.inf
+        assert lo < s <= hi or (s == 0 and k == 0)
+    # offsets are the exclusive sum of sizes
+    np.testing.assert_array_equal(
+        np.asarray(b.bin_offset),
+        np.concatenate([[0], np.cumsum(np.asarray(b.bin_size))[:-1]]))
+
+
+@given(st.lists(st.integers(0, 7), min_size=1, max_size=300))
+@settings(**SETTINGS)
+def test_bin_by_id_counting_sort(ids):
+    """The MoE router invariant: stable counting sort by expert id."""
+    ids_a = jnp.asarray(ids, jnp.int32)
+    order, counts, offsets = bin_by_id(ids_a, 8)
+    order = np.asarray(order)
+    sorted_ids = np.asarray(ids)[order]
+    assert (np.diff(sorted_ids) >= 0).all()          # grouped by expert
+    np.testing.assert_array_equal(
+        np.asarray(counts), np.bincount(ids, minlength=8))
+    # stability: within one expert, original order preserved
+    for e in range(8):
+        members = order[sorted_ids == e]
+        assert (np.diff(members) > 0).all()
+
+
+@given(st.integers(0, 2 ** 16))
+@settings(max_examples=10, deadline=None)
+def test_moe_conservation_no_drop(seed):
+    """With capacity >= S*k, MoE output == exact weighted expert mix."""
+    cfg_like = __import__("repro.configs.base", fromlist=["ArchConfig"])
+    cfg = cfg_like.ArchConfig(
+        name="t", family="moe", num_layers=1, d_model=16, num_heads=2,
+        num_kv_heads=2, d_ff=8, vocab_size=32, num_experts=4,
+        experts_per_token=2, moe_capacity_factor=16.0, dtype="float32")
+    from repro.models.param import init_params
+    p = init_params(M.moe_specs(cfg), jax.random.PRNGKey(seed))
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (2, 6, 16))
+    out, aux = M.moe(p, x, cfg)
+    ref, aux2 = M.moe_dense_dispatch(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-2,
+                               atol=2e-3)
+
+
+@given(st.integers(0, 2 ** 16))
+@settings(max_examples=10, deadline=None)
+def test_grad_compression_error_feedback(seed):
+    """Error feedback keeps the long-run mean of compressed grads exact."""
+    from repro.train.compression import quantize, dequantize
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.standard_normal(64).astype(np.float32) * 0.01)
+    err = jnp.zeros(64)
+    total_sent = jnp.zeros(64)
+    steps = 50
+    for _ in range(steps):
+        q, s, err = quantize(g, err)
+        total_sent = total_sent + dequantize(q, s)
+    np.testing.assert_allclose(np.asarray(total_sent / steps),
+                               np.asarray(g), atol=1e-4)

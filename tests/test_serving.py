@@ -1,0 +1,73 @@
+"""Serving engine: continuous batching with per-slot positions."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.models.model import Model
+from repro.serve.engine import Request, ServingEngine
+
+
+@pytest.fixture(scope="module")
+def tiny_lm():
+    cfg = get_arch("internlm2-1.8b").reduced().replace(
+        num_layers=2, d_model=32, d_ff=64, vocab_size=50, num_heads=2,
+        num_kv_heads=2, dtype="float32")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def test_engine_serves_batched_requests(tiny_lm):
+    model, params = tiny_lm
+    eng = ServingEngine(model, params, max_batch=3, max_len=48)
+    rng = np.random.default_rng(0)
+    for uid in range(7):   # more requests than slots -> continuous refill
+        plen = int(rng.integers(3, 9))
+        eng.submit(Request(uid=uid,
+                           prompt=rng.integers(0, 50, plen).astype(np.int32),
+                           max_new_tokens=5))
+    results = eng.run()
+    assert sorted(results) == list(range(7))
+    assert all(len(v) == 5 for v in results.values())
+
+
+def test_engine_matches_sequential_decode(tiny_lm):
+    """Tokens from the batched engine == single-request greedy decode."""
+    model, params = tiny_lm
+    prompt = np.array([3, 14, 15, 9, 2], np.int32)
+
+    eng = ServingEngine(model, params, max_batch=2, max_len=32)
+    eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=6))
+    # a second concurrent request with a DIFFERENT length exercises the
+    # per-slot position path
+    eng.submit(Request(uid=1, prompt=prompt[:3], max_new_tokens=6))
+    got = eng.run()[0]
+
+    # reference: pure prefill+decode loop, batch of 1
+    logits, caches = model.prefill(
+        params, {"tokens": jnp.asarray(prompt)[None]}, kv_cache_len=32)
+    toks = [int(jnp.argmax(logits[0, -1]))]
+    pos = len(prompt)
+    for _ in range(5):
+        lg, caches = model.decode_step(
+            params, jnp.asarray([[toks[-1]]], jnp.int32), caches,
+            jnp.int32(pos))
+        toks.append(int(jnp.argmax(lg[0, -1])))
+        pos += 1
+    assert got == toks
+
+
+def test_engine_eos_stops_early(tiny_lm):
+    model, params = tiny_lm
+    eng = ServingEngine(model, params, max_batch=1, max_len=32)
+    # run once to find the greedy token, then use it as eos
+    eng.submit(Request(uid=0, prompt=np.array([1, 2, 3], np.int32),
+                       max_new_tokens=4))
+    first = eng.run()[0]
+    eng2 = ServingEngine(model, params, max_batch=1, max_len=32)
+    eng2.submit(Request(uid=1, prompt=np.array([1, 2, 3], np.int32),
+                        max_new_tokens=8, eos_id=first[1]))
+    out = eng2.run()[1]
+    assert out[1] == first[1] and len(out) == 2
