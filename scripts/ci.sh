@@ -1,0 +1,13 @@
+#!/usr/bin/env bash
+# Tier-1 gate + engine perf wiring, run on every PR.
+#   ./scripts/ci.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo
+echo "== engine smoke benchmark (plan-cache effectiveness) =="
+python benchmarks/bench_engine.py --smoke

@@ -1,4 +1,4 @@
-"""The OpSparse two-phase SpGEMM orchestrator (paper Fig. 2).
+"""The OpSparse two-phase SpGEMM API (paper Fig. 2).
 
 Six steps, faithful to the paper's flow:
 
@@ -13,27 +13,20 @@ Six steps, faithful to the paper's flow:
   step5 NUM-BIN    binning on n_nz (num ladder, default 2x ranges).
   step6 NUMERIC    fill C.col/C.val, rows sorted by column.
 
-Host/device overlap (§5.4–§5.5 adaptation): every step is dispatched
-asynchronously; the only host syncs are the two the paper itself has (the
-total-n_prod / total-n_nz reads that size the next launch), plus the Alg-3
-fast-path check.  Between dispatch and sync the host plans buckets and
-workspaces — the analog of overlapping cudaMalloc with kernel execution.
-Large-row fallback rows (beyond the top hash rung) are computed with the
-ESC accumulator — the analog of the paper's global-memory hash kernels.
+The flow itself lives in ``repro.engine.executor``; ``spgemm()`` is a thin
+plan-then-execute wrapper over the process-wide execution-plan engine.
+Repeat calls whose operands land in the same shape bucket reuse a cached
+plan and its jitted executable (the recompile analog of §5.4's
+cudaMalloc/exec overlap) — same results, no re-tracing.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
-from functools import partial
 from typing import Dict, Optional
 
 import jax
-import jax.numpy as jnp
 
-from . import esc
-from .analysis import nprod_into_rpt, exclusive_sum_in_place
-from .binning import Binning, bin_rows_for_ladder
+from .binning import Binning
 from .binning_ranges import BinLadder, numeric_ladder, symbolic_ladder
 from .csr import CSR
 
@@ -77,86 +70,18 @@ def next_bucket(n: int, *, minimum: int = 16) -> int:
     return b
 
 
-_exclusive_sum = jax.jit(exclusive_sum_in_place, donate_argnums=0)
-
-
-class _StepTimer:
-    def __init__(self, enabled: bool):
-        self.enabled = enabled
-        self.timings: Dict[str, float] = {}
-
-    def measure(self, name: str, value):
-        """Block on `value` and charge the elapsed time to `name`."""
-        if self.enabled:
-            t0 = time.perf_counter()
-            jax.block_until_ready(value)
-            self.timings[name] = self.timings.get(name, 0.0) + (
-                time.perf_counter() - t0)
-        return value
-
-
 def spgemm(A: CSR, B: CSR, config: SpgemmConfig = SpgemmConfig()) -> SpgemmResult:
-    """C = A · B in CSR, two-phase, binned, statically bucketed."""
+    """C = A · B in CSR, two-phase, binned, statically bucketed.
+
+    Executed through the shared :class:`repro.engine.SpgemmEngine`: the
+    call is planned against the operands' shape-bucket signatures, and
+    repeat signatures skip straight to a cached jitted executable.
+    """
     assert A.ncols == B.nrows, (A.shape, B.shape)
-    m = A.nrows
-    sym_ladder, num_ladder = config.ladders()
-    timer = _StepTimer(config.timing)
-
-    # ---- step1: setup -----------------------------------------------------
-    rpt_buf = nprod_into_rpt(A, B)               # n_prod lives in C.rpt (§5.3)
-    timer.measure("setup", rpt_buf)
-    nprod = rpt_buf[:m]
-    total_nprod = int(jnp.sum(nprod))            # host sync #1 (sizes launches)
-
-    # ---- step2: symbolic binning -------------------------------------------
-    sym_binning = bin_rows_for_ladder(nprod, sym_ladder)
-    timer.measure("symbolic_binning", sym_binning.bins)
-
-    prod_capacity = next_bucket(max(total_nprod, 1))
-
-    # ---- step3: symbolic ----------------------------------------------------
-    if config.method == "hash":
-        from repro.kernels import spgemm_hash
-        nnz_buf = spgemm_hash.symbolic_binned(
-            A, B, sym_binning, sym_ladder,
-            prod_capacity=prod_capacity,
-            single_access=config.hash_single_access,
-            interpret=config.interpret)
-    else:
-        nnz_buf = esc.symbolic(A, B, prod_capacity=prod_capacity)
-    timer.measure("symbolic", nnz_buf)
-
-    # ---- step4: alloc -------------------------------------------------------
-    nnz = nnz_buf[:m]
-    # Numeric binning is dispatched BEFORE the host reads total_nnz: the
-    # launch-early / allocate-later ordering of §5.4.
-    num_binning = bin_rows_for_ladder(nnz, num_ladder)
-    total_nnz = int(jnp.sum(nnz))                # host sync #2 (alloc C)
-    nnz_capacity = next_bucket(max(total_nnz, 1))
-    rpt = _exclusive_sum(nnz_buf)                # in-place on the rpt buffer
-    timer.measure("alloc", rpt)
-    timer.measure("numeric_binning", num_binning.bins)
-
-    # ---- step6: numeric -----------------------------------------------------
-    if config.method == "hash":
-        from repro.kernels import spgemm_hash
-        C = spgemm_hash.numeric_binned(
-            A, B, rpt, num_binning, num_ladder,
-            prod_capacity=prod_capacity, nnz_capacity=nnz_capacity,
-            single_access=config.hash_single_access,
-            interpret=config.interpret)
-    elif config.fuse_esc:
-        C = esc.spgemm_fused(A, B, prod_capacity=prod_capacity,
-                             nnz_capacity=nnz_capacity)
-    else:
-        C = esc.numeric(A, B, rpt, prod_capacity=prod_capacity,
-                        nnz_capacity=nnz_capacity)
-    timer.measure("numeric", C.val)
-
-    return SpgemmResult(
-        C=C, total_nprod=total_nprod, total_nnz=total_nnz,
-        sym_binning=sym_binning, num_binning=num_binning,
-        timings=timer.timings)
+    # Imported lazily: core is the engine's substrate, so the dependency
+    # points engine -> core at module-load time and core -> engine only here.
+    from repro.engine.executor import default_engine
+    return default_engine().execute(A, B, config)
 
 
 def spgemm_reference(A: CSR, B: CSR) -> jax.Array:

@@ -1,0 +1,33 @@
+"""SpGEMM execution-plan engine: cached plans, batched executor, telemetry.
+
+The reusable execution layer between the one-shot ``repro.core.spgemm``
+API and the serving/analytics front-ends:
+
+  plan.py      — immutable :class:`SpgemmPlan` over operand signatures
+                 (everything derivable before data arrives).
+  cache.py     — LRU :class:`PlanCache` of plans + jitted executables
+                 (hit/miss/evict counters; the §5.4 recompile analog).
+  executor.py  — :class:`SpgemmEngine`: streaming submit/drain with
+                 plan-grouped batching and double-buffered host/device
+                 overlap; ``execute`` backs ``spgemm()``.
+  stats.py     — trace accounting and per-plan telemetry.
+
+Lifecycle::
+
+    signature -> plan (cold) -> first execution learns capacity buckets
+              -> specialized plan + jitted executable cached
+              -> steady-state requests: pad to bucket, dispatch async,
+                 one verify sync; overflow grows buckets and re-plans.
+"""
+from .cache import CacheEntry, PlanCache
+from .executor import (SpgemmEngine, SpgemmRequest, StepTimer,
+                       default_engine, reset_default_engine)
+from .plan import MatrixSig, PlanKey, SpgemmPlan, plan, plan_key
+from .stats import EngineStats, PlanStats, render, total_traces, traces_for
+
+__all__ = [
+    "CacheEntry", "PlanCache", "SpgemmEngine", "SpgemmRequest", "StepTimer",
+    "default_engine", "reset_default_engine", "MatrixSig", "PlanKey",
+    "SpgemmPlan", "plan", "plan_key", "EngineStats", "PlanStats", "render",
+    "total_traces", "traces_for",
+]

@@ -1,0 +1,419 @@
+"""Batched, plan-cached SpGEMM executor — the engine behind ``spgemm()``.
+
+This module owns BOTH execution paths for the OpSparse two-phase flow
+(paper Fig. 2):
+
+``_execute_steps``
+    The faithful host-orchestrated six-step pipeline (setup, sym-bin,
+    symbolic, alloc, num-bin, numeric) moved here from ``core/spgemm.py``.
+    It serves cold calls (capacity buckets unknown), the hash method
+    (whose §5.5 launch schedule is a host decision), and ``timing`` runs.
+
+``_build_hot_executable``
+    The steady-state path: ONE jitted closure per specialized plan.  With
+    the product/nnz buckets already learned there is nothing left for the
+    host to decide mid-flight, so the paper's two mandatory host syncs
+    collapse into a single post-dispatch read that merely *verifies* the
+    buckets — the recompile/allocation analog of §5.4's alloc/exec overlap.
+
+The :class:`SpgemmEngine` streams requests through a plan cache
+(``cache.py``): requests are grouped by plan signature, operands are padded
+to the signature's pow-2 storage buckets (so every group member reuses one
+executable), and the drain loop is double-buffered — request ``k+1`` is
+planned and dispatched on the host while request ``k`` still executes on
+device, and only then is ``k`` finalized (its one host sync).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import threading
+import time
+from collections import OrderedDict
+from typing import Callable, Dict, List, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import esc
+from repro.core.analysis import exclusive_sum_in_place, nprod_into_rpt
+from repro.core.binning import bin_rows, bin_rows_for_ladder
+from repro.core.csr import CSR
+from repro.core.spgemm import SpgemmConfig, SpgemmResult, next_bucket
+
+from . import stats as stats_mod
+from .cache import CacheEntry, PlanCache
+from .plan import MatrixSig, SpgemmPlan, plan as make_plan
+from .stats import EngineStats
+
+_exclusive_sum = jax.jit(exclusive_sum_in_place, donate_argnums=0)
+
+
+class StepTimer:
+    """Per-step wall-clock instrumentation (blocks only when enabled)."""
+
+    def __init__(self, enabled: bool):
+        self.enabled = enabled
+        self.timings: Dict[str, float] = {}
+
+    def measure(self, name: str, value):
+        """Block on `value` and charge the elapsed time to `name`."""
+        if self.enabled:
+            t0 = time.perf_counter()
+            jax.block_until_ready(value)
+            self.timings[name] = self.timings.get(name, 0.0) + (
+                time.perf_counter() - t0)
+        return value
+
+
+# ---------------------------------------------------------------------------
+# Path 1: the faithful six-step host-orchestrated flow (paper Fig. 2).
+# ---------------------------------------------------------------------------
+
+def _execute_steps(A: CSR, B: CSR, plan: SpgemmPlan,
+                   timer: StepTimer):
+    """Cold / hash / timing path.  Returns (result, prod_cap, nnz_cap).
+
+    Identical math to the pre-engine ``core.spgemm`` flow, except the
+    capacity buckets are floored at the plan's learned buckets so repeat
+    shapes keep hitting the same per-kernel executables.
+    """
+    config = plan.config
+    m = A.nrows
+    sym_ladder, num_ladder = plan.sym_ladder, plan.num_ladder
+
+    # ---- step1: setup -----------------------------------------------------
+    rpt_buf = nprod_into_rpt(A, B)               # n_prod lives in C.rpt (§5.3)
+    timer.measure("setup", rpt_buf)
+    nprod = rpt_buf[:m]
+    total_nprod = int(jnp.sum(nprod))            # host sync #1 (sizes launches)
+
+    # ---- step2: symbolic binning -------------------------------------------
+    sym_binning = bin_rows_for_ladder(nprod, sym_ladder)
+    timer.measure("symbolic_binning", sym_binning.bins)
+
+    prod_capacity = max(plan.prod_bucket or 0,
+                        next_bucket(max(total_nprod, 1)))
+
+    # ---- step3: symbolic ----------------------------------------------------
+    if config.method == "hash":
+        from repro.kernels import spgemm_hash
+        nnz_buf = spgemm_hash.symbolic_binned(
+            A, B, sym_binning, sym_ladder,
+            prod_capacity=prod_capacity,
+            single_access=config.hash_single_access,
+            interpret=config.interpret)
+    else:
+        nnz_buf = esc.symbolic(A, B, prod_capacity=prod_capacity)
+    timer.measure("symbolic", nnz_buf)
+
+    # ---- step4: alloc -------------------------------------------------------
+    nnz = nnz_buf[:m]
+    # Numeric binning is dispatched BEFORE the host reads total_nnz: the
+    # launch-early / allocate-later ordering of §5.4.
+    num_binning = bin_rows_for_ladder(nnz, num_ladder)
+    total_nnz = int(jnp.sum(nnz))                # host sync #2 (alloc C)
+    nnz_capacity = max(plan.nnz_bucket or 0, next_bucket(max(total_nnz, 1)))
+    rpt = _exclusive_sum(nnz_buf)                # in-place on the rpt buffer
+    timer.measure("alloc", rpt)
+    timer.measure("numeric_binning", num_binning.bins)
+
+    # ---- step6: numeric -----------------------------------------------------
+    if config.method == "hash":
+        from repro.kernels import spgemm_hash
+        C = spgemm_hash.numeric_binned(
+            A, B, rpt, num_binning, num_ladder,
+            prod_capacity=prod_capacity, nnz_capacity=nnz_capacity,
+            single_access=config.hash_single_access,
+            interpret=config.interpret)
+    elif config.fuse_esc:
+        C = esc.spgemm_fused(A, B, prod_capacity=prod_capacity,
+                             nnz_capacity=nnz_capacity)
+    else:
+        C = esc.numeric(A, B, rpt, prod_capacity=prod_capacity,
+                        nnz_capacity=nnz_capacity)
+    timer.measure("numeric", C.val)
+
+    result = SpgemmResult(
+        C=C, total_nprod=total_nprod, total_nnz=total_nnz,
+        sym_binning=sym_binning, num_binning=num_binning,
+        timings=timer.timings)
+    return result, prod_capacity, nnz_capacity
+
+
+# ---------------------------------------------------------------------------
+# Path 2: the steady-state jitted executable (one trace per plan).
+# ---------------------------------------------------------------------------
+
+def _build_hot_executable(plan: SpgemmPlan) -> Callable:
+    """Jit the whole two-phase flow against a specialized plan.
+
+    Every shape is static (the plan's buckets), so the full pipeline —
+    setup, both binnings, symbolic, alloc, numeric — fuses into one
+    executable with zero mid-flight host syncs.  The totals come back as
+    device scalars; the engine's finalize step reads them once to verify
+    the buckets still hold (growing them on overflow).
+    """
+    assert plan.is_specialized and plan.config.method == "esc"
+    m = plan.a_sig.nrows
+    config = plan.config
+    sym_upper = plan.sym_ladder.upper
+    sym_nb = plan.sym_ladder.num_bins
+    num_upper = plan.num_ladder.upper
+    num_nb = plan.num_ladder.num_bins
+    prod_cap, nnz_cap = plan.prod_bucket, plan.nnz_bucket
+    key = plan.signature
+
+    @jax.jit
+    def run(A: CSR, B: CSR):
+        stats_mod.record_trace(key)      # fires once per trace (recompile)
+        rpt_buf = nprod_into_rpt(A, B)
+        nprod = rpt_buf[:m]
+        total_nprod = jnp.sum(nprod)
+        sym_binning = bin_rows(nprod, upper=sym_upper, num_bins=sym_nb)
+        nnz_buf = esc.symbolic(A, B, prod_capacity=prod_cap)
+        nnz = nnz_buf[:m]
+        num_binning = bin_rows(nnz, upper=num_upper, num_bins=num_nb)
+        total_nnz = jnp.sum(nnz)
+        rpt = exclusive_sum_in_place(nnz_buf)
+        if config.fuse_esc:
+            C = esc.spgemm_fused(A, B, prod_capacity=prod_cap,
+                                 nnz_capacity=nnz_cap)
+        else:
+            C = esc.numeric(A, B, rpt, prod_capacity=prod_cap,
+                            nnz_capacity=nnz_cap)
+        return C, total_nprod, total_nnz, sym_binning, num_binning
+
+    return run
+
+
+# ---------------------------------------------------------------------------
+# Request records.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SpgemmRequest:
+    """One queued (A, B) product awaiting drain()."""
+
+    uid: int
+    A: CSR
+    B: CSR
+    config: SpgemmConfig
+
+
+@dataclasses.dataclass
+class _Finished:
+    """Synchronously-completed dispatch (steps path)."""
+
+    uid: int
+    result: SpgemmResult
+
+
+@dataclasses.dataclass
+class _Pending:
+    """Asynchronously-dispatched hot-path call awaiting its one host sync."""
+
+    uid: int
+    entry: CacheEntry
+    plan: SpgemmPlan    # the plan the run was dispatched against: the
+                        # entry may be re-specialized while we're in flight
+    A: CSR
+    B: CSR
+    handles: tuple      # (C, total_nprod, total_nnz, sym_binning, num_binning)
+    t0: float
+
+
+_Record = Union[_Finished, _Pending]
+
+
+class SpgemmEngine:
+    """Streaming SpGEMM front-end: plan cache + batched async executor.
+
+    Usage::
+
+        engine = SpgemmEngine()
+        r = engine.execute(A, B)                 # synchronous, plan-cached
+
+        engine.submit(A1, B1); engine.submit(A2, B2)
+        results = engine.drain()                 # batched, double-buffered
+
+    ``execute`` is what ``repro.core.spgemm`` wraps; ``submit``/``drain``
+    is the serving-path API (requests grouped by plan, request k+1 planned
+    while request k executes).
+    """
+
+    def __init__(self, config: Optional[SpgemmConfig] = None, *,
+                 cache_capacity: int = 64):
+        self.config = config or SpgemmConfig()
+        self.cache = PlanCache(cache_capacity)
+        self.stats = EngineStats()
+        self._queue: List[SpgemmRequest] = []
+        self._uids = itertools.count()
+
+    # -- public API ---------------------------------------------------------
+    def execute(self, A: CSR, B: CSR,
+                config: Optional[SpgemmConfig] = None) -> SpgemmResult:
+        """Plan-then-execute one product (the ``spgemm()`` backend)."""
+        rec = self._dispatch(next(self._uids), A, B, config or self.config)
+        return self._finalize(rec)
+
+    def prewarm(self, A: CSR, B: CSR,
+                config: Optional[SpgemmConfig] = None, *,
+                prod_bucket: int, nnz_bucket: int) -> SpgemmPlan:
+        """Ahead-of-time plan specialization (no execution).
+
+        Seeds the plan for (A, B)'s signatures with caller-provided
+        capacity buckets — Liu & Vinter-style ahead-of-time allocation
+        for workloads whose product sizes are known (or bounded) up
+        front, e.g. a BFS whose frontiers grow hop over hop.  The first
+        real request then goes straight to the jitted hot path instead
+        of paying a cold discovery call plus progressive regrows.
+        """
+        config = config or self.config
+        a_sig, b_sig = MatrixSig.of(A), MatrixSig.of(B)
+        entry = self.cache.get((a_sig, b_sig, config))
+        if entry is None:
+            entry = self.cache.insert(make_plan(a_sig, b_sig, config))
+        self.cache.specialize(entry, entry.plan.with_capacities(
+            max(entry.plan.prod_bucket or 0,
+                next_bucket(max(prod_bucket, 1))),
+            max(entry.plan.nnz_bucket or 0,
+                next_bucket(max(nnz_bucket, 1)))))
+        return entry.plan
+
+    def submit(self, A: CSR, B: CSR,
+               config: Optional[SpgemmConfig] = None) -> int:
+        """Queue a request; returns its uid (resolved by ``drain``)."""
+        assert A.ncols == B.nrows, (A.shape, B.shape)
+        uid = next(self._uids)
+        self._queue.append(SpgemmRequest(uid, A, B, config or self.config))
+        return uid
+
+    def drain(self) -> Dict[int, SpgemmResult]:
+        """Run all queued requests; returns {uid: result}.
+
+        Requests are grouped by plan signature (group members share one
+        executable) and pipelined: dispatch(k+1) happens before
+        finalize(k), so host planning overlaps device execution.
+        """
+        queue, self._queue = self._queue, []
+        self.stats.drains += 1
+        groups: "OrderedDict[tuple, List[SpgemmRequest]]" = OrderedDict()
+        for req in queue:
+            key = (MatrixSig.of(req.A), MatrixSig.of(req.B), req.config)
+            groups.setdefault(key, []).append(req)
+
+        results: Dict[int, SpgemmResult] = {}
+        inflight: Optional[_Record] = None
+        for req in itertools.chain.from_iterable(groups.values()):
+            rec = self._dispatch(req.uid, req.A, req.B, req.config)
+            if inflight is not None:
+                if isinstance(inflight, _Pending):
+                    self.stats.overlapped += 1   # planned k+1 while k ran
+                results[inflight.uid] = self._finalize(inflight)
+            inflight = rec
+        if inflight is not None:
+            results[inflight.uid] = self._finalize(inflight)
+        return results
+
+    def report(self) -> str:
+        return stats_mod.render(self)
+
+    # -- internals ----------------------------------------------------------
+    def _dispatch(self, uid: int, A: CSR, B: CSR,
+                  config: SpgemmConfig) -> _Record:
+        assert A.ncols == B.nrows, (A.shape, B.shape)
+        self.stats.requests += 1
+        t0 = time.perf_counter()
+        a_sig, b_sig = MatrixSig.of(A), MatrixSig.of(B)
+        entry = self.cache.get((a_sig, b_sig, config))
+        if entry is None:
+            entry = self.cache.insert(make_plan(a_sig, b_sig, config))
+        entry.stats.calls += 1
+
+        # Canonicalize operand storage to the signature buckets so every
+        # request in the bucket presents identical static shapes.
+        A = A.with_capacity(a_sig.cap_bucket)
+        B = B.with_capacity(b_sig.cap_bucket)
+
+        plan = entry.plan
+        hot_eligible = (plan.is_specialized and config.method == "esc"
+                        and not config.timing)
+        if not hot_eligible:
+            result, prod_cap, nnz_cap = _execute_steps(
+                A, B, plan, StepTimer(config.timing))
+            if not plan.is_specialized:
+                # Progressive allocation: learn the buckets for steady state.
+                self.cache.specialize(
+                    entry, plan.with_capacities(prod_cap, nnz_cap))
+            entry.stats.steps_calls += 1
+            entry.stats.time_s += time.perf_counter() - t0
+            return _Finished(uid, result)
+
+        if entry.executable is None:
+            entry.executable = _build_hot_executable(plan)
+        handles = entry.executable(A, B)         # async dispatch, no sync
+        entry.stats.hot_calls += 1
+        return _Pending(uid, entry, plan, A, B, handles, t0)
+
+    def _finalize(self, rec: _Record) -> SpgemmResult:
+        if isinstance(rec, _Finished):
+            return rec.result
+
+        C, tnp, tnz, sym_binning, num_binning = rec.handles
+        total_nprod, total_nnz = (
+            int(x) for x in jax.device_get((tnp, tnz)))  # the ONE host sync
+        # Verify against the DISPATCH-TIME plan: a concurrent overflow may
+        # have re-specialized the entry with larger buckets than this run
+        # actually executed with, and passing its check would return a
+        # silently truncated C.
+        plan = rec.plan
+        if (total_nprod > plan.prod_bucket or total_nnz > plan.nnz_bucket):
+            # Bucket overflow (rare: a same-signature request with a larger
+            # product).  Grow the buckets and redo via the steps path.
+            self.stats.capacity_grows += 1
+            rec.entry.stats.capacity_grows += 1
+            # NB: an overflowed symbolic phase truncates its expansion, so
+            # the hot run's totals are only lower bounds; the steps redo
+            # reports the true capacities to respecialize with.  Floor at
+            # the entry's CURRENT buckets so a concurrent grow is kept.
+            current = rec.entry.plan
+            grown = plan.with_capacities(
+                max(plan.prod_bucket, current.prod_bucket or 0,
+                    next_bucket(max(total_nprod, 1))),
+                max(plan.nnz_bucket, current.nnz_bucket or 0,
+                    next_bucket(max(total_nnz, 1))))
+            result, prod_cap, nnz_cap = _execute_steps(
+                rec.A, rec.B, grown, StepTimer(False))
+            self.cache.specialize(
+                rec.entry, grown.with_capacities(prod_cap, nnz_cap))
+            rec.entry.stats.time_s += time.perf_counter() - rec.t0
+            return result
+
+        rec.entry.stats.time_s += time.perf_counter() - rec.t0
+        return SpgemmResult(
+            C=C, total_nprod=total_nprod, total_nnz=total_nnz,
+            sym_binning=sym_binning, num_binning=num_binning, timings={})
+
+
+# ---------------------------------------------------------------------------
+# The process-wide default engine behind ``repro.core.spgemm``.
+# ---------------------------------------------------------------------------
+
+_DEFAULT: Optional[SpgemmEngine] = None
+_DEFAULT_LOCK = threading.Lock()
+
+
+def default_engine() -> SpgemmEngine:
+    """Shared engine serving every ``spgemm()`` call in the process."""
+    global _DEFAULT
+    with _DEFAULT_LOCK:
+        if _DEFAULT is None:
+            _DEFAULT = SpgemmEngine()
+        return _DEFAULT
+
+
+def reset_default_engine() -> None:
+    """Drop the shared engine (tests that need a cold cache)."""
+    global _DEFAULT
+    _DEFAULT = None

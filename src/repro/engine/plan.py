@@ -1,0 +1,125 @@
+"""Execution plans: everything derivable about a SpGEMM call BEFORE data.
+
+OpSparse overlaps result-matrix allocation with kernel execution (§5.4) and
+fuses all metadata into one allocation (§5.3) because on a GPU the per-call
+setup cost is ``cudaMalloc`` + launch configuration.  In the JAX port the
+analogous per-call cost is *trace + compile*: every distinct static shape
+is a new executable.  An :class:`SpgemmPlan` therefore captures the full
+static configuration of a call — the ladder pair, the accumulator method,
+the pow-2 capacity buckets, and the donated fused-metadata buffer layout —
+keyed by *signatures* of the operands rather than the operands themselves,
+so that every request landing in the same shape bucket shares one plan
+(and, via :mod:`repro.engine.cache`, one compiled executable).
+
+Plans are progressive (Liu & Vinter-style ahead-of-time allocation): a
+fresh plan has no product/nnz capacity buckets (they depend on data); the
+first execution *learns* them and :meth:`SpgemmPlan.with_capacities`
+produces the specialized plan that steady-state traffic runs against.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from repro.core.binning_ranges import BinLadder
+from repro.core.csr import CSR
+from repro.core.spgemm import SpgemmConfig, next_bucket
+from repro.core.workspace import WorkspacePlan
+
+
+@dataclasses.dataclass(frozen=True)
+class MatrixSig:
+    """Shape/nnz-bucket signature of one CSR operand.
+
+    Two matrices with the same signature are interchangeable for planning:
+    same static shapes after padding ``col``/``val`` to ``cap_bucket``
+    (pow-2 — the recompile analog of §5.4's cudaMalloc bucketing), hence
+    the same traced executables.
+    """
+
+    nrows: int
+    ncols: int
+    cap_bucket: int     # pow-2 bucket of the col/val storage capacity
+    dtype: str          # value dtype name
+
+    @classmethod
+    def of(cls, M: CSR) -> "MatrixSig":
+        return cls(nrows=M.nrows, ncols=M.ncols,
+                   cap_bucket=next_bucket(M.capacity),
+                   dtype=str(M.val.dtype))
+
+
+PlanKey = Tuple[MatrixSig, MatrixSig, SpgemmConfig]
+
+
+@dataclasses.dataclass(frozen=True)
+class SpgemmPlan:
+    """Immutable pre-data execution plan for one (A_sig, B_sig, config).
+
+    Fields derivable before any data arrives:
+      a_sig / b_sig    operand signatures (shapes + storage buckets).
+      config           the full SpgemmConfig (method, multipliers, ...).
+      sym_ladder       symbolic bin ladder (paper Table 1 ranges).
+      num_ladder       numeric bin ladder (paper Table 2 ranges).
+      sym_workspace    donated fused-metadata buffer layout for the
+      num_workspace    symbolic/numeric binning steps (§5.3 analog).
+
+    Learned on first execution (progressive allocation):
+      prod_bucket      pow-2 capacity for the intermediate-product
+                       expansion (``None`` until learned).
+      nnz_bucket       pow-2 capacity for C.col/C.val (``None`` until
+                       learned).
+    """
+
+    a_sig: MatrixSig
+    b_sig: MatrixSig
+    config: SpgemmConfig
+    sym_ladder: BinLadder
+    num_ladder: BinLadder
+    sym_workspace: WorkspacePlan
+    num_workspace: WorkspacePlan
+    prod_bucket: Optional[int] = None
+    nnz_bucket: Optional[int] = None
+
+    @property
+    def signature(self) -> PlanKey:
+        """The cache key: ladders/workspaces are derived from it."""
+        return (self.a_sig, self.b_sig, self.config)
+
+    @property
+    def is_specialized(self) -> bool:
+        """True once the capacity buckets have been learned."""
+        return self.prod_bucket is not None and self.nnz_bucket is not None
+
+    def with_capacities(self, prod_bucket: int,
+                        nnz_bucket: int) -> "SpgemmPlan":
+        """Specialized plan with learned (or grown) capacity buckets."""
+        return dataclasses.replace(self, prod_bucket=int(prod_bucket),
+                                   nnz_bucket=int(nnz_bucket))
+
+    def admits(self, A: CSR, B: CSR) -> bool:
+        """Whether (A, B) land in this plan's shape buckets."""
+        return MatrixSig.of(A) == self.a_sig and MatrixSig.of(B) == self.b_sig
+
+
+def plan(a_sig: MatrixSig, b_sig: MatrixSig,
+         config: SpgemmConfig = SpgemmConfig()) -> SpgemmPlan:
+    """Construct the pre-data plan for a signature pair.
+
+    Everything here is derivable without looking at values: the ladders
+    come from the config's multipliers, the workspace layouts from
+    (M, NUM_BIN) alone.  Capacity buckets stay unlearned (``None``).
+    """
+    assert a_sig.ncols == b_sig.nrows, (a_sig, b_sig)
+    sym_ladder, num_ladder = config.ladders()
+    return SpgemmPlan(
+        a_sig=a_sig, b_sig=b_sig, config=config,
+        sym_ladder=sym_ladder, num_ladder=num_ladder,
+        sym_workspace=WorkspacePlan(a_sig.nrows, sym_ladder.num_bins),
+        num_workspace=WorkspacePlan(a_sig.nrows, num_ladder.num_bins),
+    )
+
+
+def plan_key(A: CSR, B: CSR, config: SpgemmConfig) -> PlanKey:
+    """Cache key for a concrete request — signatures, not arrays."""
+    return (MatrixSig.of(A), MatrixSig.of(B), config)

@@ -1,0 +1,89 @@
+"""Engine telemetry: trace accounting and per-plan counters.
+
+The paper reports its systems wins (alloc/exec overlap, metadata
+minimization) through per-step timing breakdowns (§6.3); the engine's
+analogous observables are *traces* (each one is a recompile — the
+cudaMalloc-analog cost), plan-cache hit rates, and capacity-bucket growth
+events.  Everything here is plain host-side bookkeeping surfaced to
+``benchmarks/bench_engine.py`` and the regression tests.
+
+Trace counting works by side effect: :func:`record_trace` is called in the
+body of each per-plan jitted executable, so it runs exactly once per trace
+(Python executes only while JAX is tracing) — repeat calls that hit the
+compiled executable never touch it.  That gives the tests a direct "zero
+retraces for a repeated shape" observable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Dict
+
+# -- trace accounting (module-global: jit caches are process-global too) ----
+
+_TRACES: Dict = defaultdict(int)
+_TOTAL = {"count": 0}
+
+
+def record_trace(key) -> None:
+    """Called from INSIDE a traced executable body — fires once per trace."""
+    _TRACES[key] += 1
+    _TOTAL["count"] += 1
+
+
+def total_traces() -> int:
+    """Process-wide count of engine hot-path traces (recompiles)."""
+    return _TOTAL["count"]
+
+
+def traces_for(key) -> int:
+    return _TRACES.get(key, 0)
+
+
+# -- per-plan / per-engine counters ----------------------------------------
+
+@dataclasses.dataclass
+class PlanStats:
+    """Telemetry for one cached plan."""
+
+    calls: int = 0            # requests executed under this plan
+    hot_calls: int = 0        # served by the jitted steady-state executable
+    steps_calls: int = 0      # served by the host-orchestrated six-step path
+    capacity_grows: int = 0   # bucket overflows that forced a re-plan
+    time_s: float = 0.0       # wall-clock charged to this plan
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Engine-level counters (cache counters live on the PlanCache)."""
+
+    requests: int = 0
+    overlapped: int = 0       # request k+1 planned while k ran on device
+    capacity_grows: int = 0
+    drains: int = 0
+
+
+def render(engine) -> str:
+    """Human-readable telemetry block for benchmarks/examples."""
+    cache = engine.cache
+    s = engine.stats
+    lines = [
+        "engine: %d requests, %d plans cached (cap %d)" % (
+            s.requests, len(cache), cache.capacity),
+        "plan cache: %d hits / %d misses / %d evictions (hit rate %.1f%%)" % (
+            cache.hits, cache.misses, cache.evictions,
+            100.0 * cache.hit_rate),
+        "overlap: %d requests planned while predecessor executed" % s.overlapped,
+        "recompiles: %d hot-path traces, %d capacity grows" % (
+            total_traces(), s.capacity_grows),
+    ]
+    for key, entry in cache.items():
+        ps = entry.stats
+        p = entry.plan
+        lines.append(
+            "  plan %dx%d·%dx%d %s: %d calls (%d hot / %d steps), "
+            "buckets prod=%s nnz=%s, %.1f ms total" % (
+                p.a_sig.nrows, p.a_sig.ncols, p.b_sig.nrows, p.b_sig.ncols,
+                p.config.method, ps.calls, ps.hot_calls, ps.steps_calls,
+                p.prod_bucket, p.nnz_bucket, ps.time_s * 1e3))
+    return "\n".join(lines)

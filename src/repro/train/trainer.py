@@ -131,10 +131,12 @@ class Trainer:
         self.rollbacks += 1
         if self.rollbacks > self.cfg.max_rollbacks:
             raise RuntimeError("too many NaN rollbacks — aborting")
+        # Flush any in-flight async save BEFORE probing the directory: the
+        # last good checkpoint may still be in the writer thread.
+        self.saver.wait()
         last = ckpt.latest_step(self.cfg.ckpt_dir)
         if last is None:
             raise RuntimeError("non-finite loss before first checkpoint")
-        self.saver.wait()
         state, extra = ckpt.restore(self.cfg.ckpt_dir, state,
                                     shardings=self.shardings)
         restored = int(extra["train_step"])

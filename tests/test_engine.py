@@ -1,0 +1,239 @@
+"""Engine subsystem tests: plans, cache, batched executor, retraces."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import CSR, SpgemmConfig, next_bucket, random_csr, spgemm
+from repro.core.spgemm import spgemm_reference
+from repro.engine import (MatrixSig, PlanCache, SpgemmEngine, plan, plan_key,
+                          total_traces)
+from repro.engine.executor import default_engine
+
+
+def _pair(seed, m=32, k=28, n=36, da=3.0, db=3.0, dist="uniform"):
+    A = random_csr(jax.random.PRNGKey(seed), m, k, avg_nnz_per_row=da,
+                   distribution=dist)
+    B = random_csr(jax.random.PRNGKey(seed + 1), k, n, avg_nnz_per_row=db,
+                   distribution=dist)
+    return A, B
+
+
+def _sigs(A, B):
+    return MatrixSig.of(A), MatrixSig.of(B)
+
+
+# ---------------------------------------------------------------------------
+# Plan signatures.
+# ---------------------------------------------------------------------------
+
+def test_matrix_sig_bucketing():
+    A, _ = _pair(1)
+    sig = MatrixSig.of(A)
+    assert sig.nrows == A.nrows and sig.ncols == A.ncols
+    assert sig.cap_bucket == next_bucket(A.capacity)
+    # Padding within the bucket does not change the signature.
+    assert MatrixSig.of(A.with_capacity(sig.cap_bucket)) == sig
+    # Crossing the bucket boundary does.
+    assert MatrixSig.of(A.with_capacity(2 * sig.cap_bucket)) != sig
+
+
+def test_plan_signature_equality_and_hashing():
+    A, B = _pair(3)
+    a_sig, b_sig = _sigs(A, B)
+    cfg = SpgemmConfig()
+    p1, p2 = plan(a_sig, b_sig, cfg), plan(a_sig, b_sig, cfg)
+    assert p1 == p2
+    assert hash(p1) == hash(p2)
+    assert p1.signature == plan_key(A, B, cfg)
+    # Config is part of the identity.
+    p3 = plan(a_sig, b_sig, SpgemmConfig(method="hash"))
+    assert p3 != p1 and p3.signature != p1.signature
+    # Specialization learns buckets without changing the cache identity.
+    sp = p1.with_capacities(1024, 512)
+    assert sp.is_specialized and not p1.is_specialized
+    assert sp.signature == p1.signature
+    assert sp.admits(A, B)
+
+
+def test_plan_rejects_mismatched_shapes():
+    A, B = _pair(5)
+    with pytest.raises(AssertionError):
+        plan(MatrixSig.of(B), MatrixSig.of(A), SpgemmConfig())
+
+
+# ---------------------------------------------------------------------------
+# Plan cache.
+# ---------------------------------------------------------------------------
+
+def test_plan_cache_hit_miss_evict():
+    cfg = SpgemmConfig()
+    cache = PlanCache(capacity=2)
+    plans = []
+    for m in (8, 16, 24):
+        A, B = _pair(m, m=m)
+        plans.append(plan(*_sigs(A, B), cfg))
+
+    assert cache.get(plans[0].signature) is None          # miss
+    e0 = cache.insert(plans[0])
+    assert cache.get(plans[0].signature) is e0            # hit
+    cache.insert(plans[1])
+    cache.insert(plans[2])                                # evicts plans[0] (LRU)
+    assert len(cache) == 2
+    assert cache.evictions == 1
+    assert plans[0].signature not in cache
+    assert plans[2].signature in cache
+    assert cache.get(plans[0].signature) is None          # miss again
+    assert cache.hits == 1 and cache.misses == 2
+
+    # Re-specialization drops the stale executable.
+    e2 = cache.get(plans[2].signature)
+    e2.executable = lambda *a: None
+    cache.specialize(e2, plans[2].with_capacities(64, 64))
+    assert e2.executable is None and e2.plan.is_specialized
+
+
+def test_plan_cache_lru_order_refresh():
+    cfg = SpgemmConfig()
+    cache = PlanCache(capacity=2)
+    pa = plan(*_sigs(*_pair(8, m=8)), cfg)
+    pb = plan(*_sigs(*_pair(16, m=16)), cfg)
+    pc = plan(*_sigs(*_pair(24, m=24)), cfg)
+    cache.insert(pa)
+    cache.insert(pb)
+    cache.get(pa.signature)       # refresh pa -> pb becomes LRU
+    cache.insert(pc)
+    assert pa.signature in cache
+    assert pb.signature not in cache
+
+
+# ---------------------------------------------------------------------------
+# Executor vs dense oracle.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dist", ["uniform", "powerlaw", "banded"])
+def test_engine_matches_oracle_cold_and_hot(dist):
+    engine = SpgemmEngine()
+    A, B = _pair(7, dist=dist)
+    ref = np.asarray(spgemm_reference(A, B))
+    r_cold = engine.execute(A, B)       # steps path (learns buckets)
+    r_hot = engine.execute(A, B)        # jitted steady-state path
+    np.testing.assert_allclose(np.asarray(r_cold.C.to_dense()), ref,
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(r_hot.C.to_dense()), ref,
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(r_cold.C.rpt),
+                                  np.asarray(r_hot.C.rpt))
+    assert r_cold.total_nnz == r_hot.total_nnz
+    entry = next(iter(engine.cache.items()))[1]
+    assert entry.stats.steps_calls == 1 and entry.stats.hot_calls == 1
+
+
+def test_engine_batched_drain_matches_oracle():
+    engine = SpgemmEngine()
+    # Mixed stream: two shape buckets interleaved.
+    reqs = []
+    for s in range(6):
+        A, B = _pair(40 + s, m=24 if s % 2 else 32)
+        reqs.append((engine.submit(A, B), A, B))
+    results = engine.drain()
+    assert len(results) == len(reqs)
+    for uid, A, B in reqs:
+        ref = np.asarray(spgemm_reference(A, B))
+        np.testing.assert_allclose(np.asarray(results[uid].C.to_dense()),
+                                   ref, rtol=1e-5, atol=1e-5)
+    assert engine.stats.requests == 6
+    assert len(engine.cache) == 2          # one plan per shape bucket
+
+
+def test_engine_drain_overlaps_requests():
+    engine = SpgemmEngine()
+    A, B = _pair(60)
+    engine.execute(A, B)                   # specialize the plan
+    cap_a, cap_b = MatrixSig.of(A).cap_bucket, MatrixSig.of(B).cap_bucket
+    for s in range(4):
+        A2, B2 = _pair(70 + s)
+        engine.submit(A2.with_capacity(cap_a), B2.with_capacity(cap_b))
+    engine.drain()
+    # Hot-path requests k+1 were planned while k executed on device.
+    assert engine.stats.overlapped >= 3
+
+
+# ---------------------------------------------------------------------------
+# Retrace / capacity-bucket behavior.
+# ---------------------------------------------------------------------------
+
+def test_repeated_shape_triggers_zero_retraces():
+    engine = SpgemmEngine()
+    A, B = _pair(80)
+    cap_a, cap_b = MatrixSig.of(A).cap_bucket, MatrixSig.of(B).cap_bucket
+    engine.execute(A, B)                   # cold: steps path, no hot trace
+    engine.execute(A, B)                   # first hot call: exactly 1 trace
+    baseline = total_traces()
+    for s in range(3):                     # distinct same-bucket matrices
+        A2, B2 = _pair(90 + s)
+        r = engine.execute(A2.with_capacity(cap_a), B2.with_capacity(cap_b))
+        ref = np.asarray(spgemm_reference(A2, B2))
+        np.testing.assert_allclose(np.asarray(r.C.to_dense()), ref,
+                                   rtol=1e-5, atol=1e-5)
+    assert total_traces() == baseline      # zero retraces on repeats
+    assert engine.stats.capacity_grows == 0
+    assert engine.cache.hits >= 4
+
+
+def test_prewarm_skips_cold_discovery():
+    engine = SpgemmEngine()
+    A, B = _pair(120)
+    engine.prewarm(A, B, prod_bucket=4096, nnz_bucket=4096)
+    r = engine.execute(A, B)               # first real call is already hot
+    ref = np.asarray(spgemm_reference(A, B))
+    np.testing.assert_allclose(np.asarray(r.C.to_dense()), ref,
+                               rtol=1e-5, atol=1e-5)
+    entry = next(iter(engine.cache.items()))[1]
+    assert entry.stats.hot_calls == 1 and entry.stats.steps_calls == 0
+    assert engine.stats.capacity_grows == 0
+    # Prewarming never shrinks learned buckets.
+    p = engine.prewarm(A, B, prod_bucket=16, nnz_bucket=16)
+    assert p.prod_bucket == 4096 and p.nnz_bucket == 4096
+
+
+def test_capacity_bucket_growth_under_pressure():
+    engine = SpgemmEngine()
+    d_small = np.zeros((8, 8), np.float32)
+    d_small[0, :3] = 1.0                   # 3 nnz -> tiny learned buckets
+    d_big = np.ones((8, 8), np.float32)    # 64 nnz -> overflows them
+    dB = np.ones((8, 8), np.float32)
+    A_small = CSR.from_dense(d_small).with_capacity(64)
+    A_big = CSR.from_dense(d_big)          # capacity 64: same signature
+    Bc = CSR.from_dense(dB)
+    assert MatrixSig.of(A_small) == MatrixSig.of(A_big)
+
+    engine.execute(A_small, Bc)
+    engine.execute(A_small, Bc)            # hot path established
+    r = engine.execute(A_big, Bc)          # same plan, bigger product
+    np.testing.assert_allclose(np.asarray(r.C.to_dense()), d_big @ dB,
+                               rtol=1e-5)
+    assert engine.stats.capacity_grows == 1
+    r2 = engine.execute(A_big, Bc)         # grown buckets now hold
+    np.testing.assert_allclose(np.asarray(r2.C.to_dense()), d_big @ dB,
+                               rtol=1e-5)
+    assert engine.stats.capacity_grows == 1
+    # The small request still runs correctly under the grown plan.
+    r3 = engine.execute(A_small, Bc)
+    np.testing.assert_allclose(np.asarray(r3.C.to_dense()), d_small @ dB,
+                               rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# The core API rides on the engine.
+# ---------------------------------------------------------------------------
+
+def test_spgemm_wrapper_routes_through_default_engine():
+    A, B = _pair(99)
+    before = default_engine().stats.requests
+    res = spgemm(A, B)
+    assert default_engine().stats.requests == before + 1
+    # Public result surface is unchanged.
+    for field in ("C", "total_nprod", "total_nnz", "sym_binning",
+                  "num_binning", "timings"):
+        assert hasattr(res, field)
+    assert res.compression_ratio >= 1.0

@@ -2,6 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the hypothesis package")
 from hypothesis import given, settings, strategies as st, HealthCheck
 
 from repro.core import (CSR, SpgemmConfig, bin_rows, bin_rows_for_ladder,
