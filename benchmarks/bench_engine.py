@@ -1,16 +1,20 @@
 """Plan-cache effectiveness on a streaming request pipeline.
 
-Acceptance target (ISSUE 1): on a stream of >=20 same-bucket SpGEMM
-requests, steady-state per-call wall-clock must be >=5x lower than the
-first (cold-trace) call, with a reported plan-cache hit rate >=90%.
+Acceptance targets (ISSUE 1, extended by ISSUE 2 to the hash method): on
+a stream of >=20 same-bucket SpGEMM requests, steady-state per-call
+wall-clock must be >=5x lower than the first (cold-trace) call, with a
+reported plan-cache hit rate >=90% and ZERO retraces after warmup.
 
 The stream models serving traffic: distinct matrices whose storage lands
 in one pow-2 capacity bucket, so every request after the first reuses the
-cached specialized plan and its jitted executable (zero retraces).  A
+cached specialized plan and its jitted executable.  ``--method hash``
+exercises the bin-count-bucketed hash steady state: the warmup prefix may
+grow the learned launch schedule (rung discovery), after which the gate
+requires the jitted path to serve every request without recompiling.  A
 second phase pushes the same stream through ``submit``/``drain`` to
 exercise the batched, double-buffered path.
 
-Run:  PYTHONPATH=src python benchmarks/bench_engine.py [--smoke]
+Run:  PYTHONPATH=src python benchmarks/bench_engine.py [--smoke] [--method hash]
 """
 from __future__ import annotations
 
@@ -45,7 +49,12 @@ def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="small sizes for CI (~30 s)")
+    ap.add_argument("--method", choices=("esc", "hash"), default="esc",
+                    help="accumulator method for the whole stream")
     ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--warmup", type=int, default=4,
+                    help="requests before the zero-retrace gate arms "
+                         "(cold call + schedule/rung discovery)")
     ap.add_argument("--m", type=int, default=256)
     ap.add_argument("--k", type=int, default=256)
     ap.add_argument("--n", type=int, default=256)
@@ -57,17 +66,26 @@ def main(argv=None):
         ap.error("--requests must be >= 1")
     if args.smoke:
         args.requests, args.m, args.k, args.n = 20, 64, 64, 64
+    if not 0 < args.warmup < args.requests:
+        ap.error("--warmup must be in [1, effective --requests)")
 
     stream = build_stream(args.requests, args.m, args.k, args.n, args.avg)
-    engine = SpgemmEngine(SpgemmConfig(method="esc"))
+    engine = SpgemmEngine(SpgemmConfig(method=args.method))
 
     # ---- phase 1: per-call wall-clock over the stream ---------------------
     times = []
+    warm_traces = 0
     for i, (A, B) in enumerate(stream):
         t0 = time.perf_counter()
         res = engine.execute(A, B)
         jax.block_until_ready(res.C.val)
         times.append(time.perf_counter() - t0)
+        if i == args.warmup - 1:
+            # A schedule grow on this very request leaves the rebuild (and
+            # its one retrace) pending; absorb it with an untimed repeat of
+            # an already-admitted pair before the gate arms.
+            jax.block_until_ready(engine.execute(A, B).C.val)
+            warm_traces = total_traces()   # retrace gate arms here
         if args.check:
             ref = np.asarray(spgemm_reference(A, B))
             np.testing.assert_allclose(np.asarray(res.C.to_dense()), ref,
@@ -78,17 +96,20 @@ def main(argv=None):
     steady = sum(tail) / len(tail)
     speedup = cold / steady
     hit_rate = engine.cache.hit_rate
+    retraces = total_traces() - warm_traces
 
     print("request,call_ms")
     for i, t in enumerate(times):
         print(f"{i},{t * 1e3:.2f}")
     print()
+    print(f"method:        {args.method:>9s}")
     print(f"cold call:     {cold * 1e3:9.1f} ms  (trace + compile)")
     print(f"steady state:  {steady * 1e3:9.2f} ms  "
           f"(mean of last {len(tail)} calls)")
     print(f"speedup:       {speedup:9.1f} x   (target >= 5x)")
     print(f"hit rate:      {hit_rate * 100:9.1f} %   (target >= 90%)")
-    print(f"hot traces:    {total_traces():9d}")
+    print(f"hot traces:    {total_traces():9d}  "
+          f"({retraces} after {args.warmup}-request warmup, target 0)")
 
     # ---- phase 2: batched submit/drain (double-buffered overlap) ----------
     uids = [engine.submit(A, B) for A, B in stream]
@@ -102,10 +123,11 @@ def main(argv=None):
     print()
     print(engine.report())
 
-    ok = speedup >= 5.0 and hit_rate >= 0.90
+    ok = speedup >= 5.0 and hit_rate >= 0.90 and retraces == 0
     print()
     print("PASS" if ok else "FAIL",
-          f"(speedup {speedup:.1f}x, hit rate {hit_rate * 100:.1f}%)")
+          f"(speedup {speedup:.1f}x, hit rate {hit_rate * 100:.1f}%, "
+          f"{retraces} steady-state retraces)")
     return 0 if ok else 1
 
 

@@ -11,3 +11,7 @@ python -m pytest -x -q
 echo
 echo "== engine smoke benchmark (plan-cache effectiveness) =="
 python benchmarks/bench_engine.py --smoke
+
+echo
+echo "== engine smoke benchmark (hash method: zero-retrace steady state) =="
+python benchmarks/bench_engine.py --smoke --method hash

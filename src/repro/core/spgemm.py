@@ -29,6 +29,7 @@ import jax
 from .binning import Binning
 from .binning_ranges import BinLadder, numeric_ladder, symbolic_ladder
 from .csr import CSR
+from .workspace import next_bucket  # canonical home (re-exported for API compat)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -59,15 +60,6 @@ class SpgemmResult:
     @property
     def compression_ratio(self) -> float:
         return self.total_nprod / max(self.total_nnz, 1)
-
-
-def next_bucket(n: int, *, minimum: int = 16) -> int:
-    """Pow-2 shape bucket — bounds both padding waste (<2x) and the number
-    of distinct compiled executables (the recompile<->cudaMalloc analog)."""
-    b = minimum
-    while b < n:
-        b <<= 1
-    return b
 
 
 def spgemm(A: CSR, B: CSR, config: SpgemmConfig = SpgemmConfig()) -> SpgemmResult:

@@ -22,6 +22,20 @@ import jax.numpy as jnp
 from .binning import Binning, classify
 
 
+def next_bucket(n: int, *, minimum: int = 16) -> int:
+    """Pow-2 shape bucket — bounds both padding waste (<2x) and the number
+    of distinct compiled executables (the recompile<->cudaMalloc analog).
+
+    The ONE shared copy: ``core.spgemm`` (storage/capacity buckets), the
+    hash drivers (per-rung row-count buckets, ``minimum=8``), and the
+    engine's progressive allocation all bucket through here.
+    """
+    b = minimum
+    while b < n:
+        b <<= 1
+    return b
+
+
 @dataclasses.dataclass(frozen=True)
 class WorkspacePlan:
     m: int

@@ -22,12 +22,13 @@ Lifecycle::
 from .cache import CacheEntry, PlanCache
 from .executor import (SpgemmEngine, SpgemmRequest, StepTimer,
                        default_engine, reset_default_engine)
-from .plan import MatrixSig, PlanKey, SpgemmPlan, plan, plan_key
+from .plan import (HashSchedule, MatrixSig, PlanKey, SpgemmPlan, plan,
+                   plan_key)
 from .stats import EngineStats, PlanStats, render, total_traces, traces_for
 
 __all__ = [
     "CacheEntry", "PlanCache", "SpgemmEngine", "SpgemmRequest", "StepTimer",
-    "default_engine", "reset_default_engine", "MatrixSig", "PlanKey",
-    "SpgemmPlan", "plan", "plan_key", "EngineStats", "PlanStats", "render",
-    "total_traces", "traces_for",
+    "default_engine", "reset_default_engine", "HashSchedule", "MatrixSig",
+    "PlanKey", "SpgemmPlan", "plan", "plan_key", "EngineStats", "PlanStats",
+    "render", "total_traces", "traces_for",
 ]

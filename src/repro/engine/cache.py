@@ -26,7 +26,7 @@ class CacheEntry:
     """A cached plan plus its compiled artifacts and telemetry."""
 
     plan: SpgemmPlan
-    executable: Optional[Callable] = None   # jitted hot path (ESC method)
+    executable: Optional[Callable] = None   # jitted hot path (ESC or hash)
     stats: PlanStats = dataclasses.field(default_factory=PlanStats)
 
 

@@ -6,15 +6,19 @@ This module owns BOTH execution paths for the OpSparse two-phase flow
 ``_execute_steps``
     The faithful host-orchestrated six-step pipeline (setup, sym-bin,
     symbolic, alloc, num-bin, numeric) moved here from ``core/spgemm.py``.
-    It serves cold calls (capacity buckets unknown), the hash method
-    (whose §5.5 launch schedule is a host decision), and ``timing`` runs.
+    It serves cold calls (capacity buckets / hash launch schedule still
+    unknown) and ``timing`` runs.
 
-``_build_hot_executable``
-    The steady-state path: ONE jitted closure per specialized plan.  With
-    the product/nnz buckets already learned there is nothing left for the
-    host to decide mid-flight, so the paper's two mandatory host syncs
-    collapse into a single post-dispatch read that merely *verifies* the
-    buckets — the recompile/allocation analog of §5.4's alloc/exec overlap.
+``_build_hot_executable`` / ``_build_hash_executable``
+    The steady-state paths: ONE jitted closure per specialized plan.  With
+    the product/nnz buckets — and, for the hash method, the per-rung
+    bin-count buckets of the :class:`~repro.engine.plan.HashSchedule` —
+    already learned there is nothing left for the host to decide
+    mid-flight, so the paper's mandatory host syncs collapse into a single
+    post-dispatch read that merely *verifies* the buckets — the
+    recompile/allocation analog of §5.4's alloc/exec overlap.  For hash
+    plans that read also covers the bin sizes and the fallback rung's
+    sub-product totals (still one ``device_get``).
 
 The :class:`SpgemmEngine` streams requests through a plan cache
 (``cache.py``): requests are grouped by plan signature, operands are padded
@@ -40,13 +44,20 @@ from repro.core.analysis import exclusive_sum_in_place, nprod_into_rpt
 from repro.core.binning import bin_rows, bin_rows_for_ladder
 from repro.core.csr import CSR
 from repro.core.spgemm import SpgemmConfig, SpgemmResult, next_bucket
+from repro.kernels import spgemm_hash
 
 from . import stats as stats_mod
 from .cache import CacheEntry, PlanCache
-from .plan import MatrixSig, SpgemmPlan, plan as make_plan
+from .plan import HashSchedule, MatrixSig, SpgemmPlan, plan as make_plan
 from .stats import EngineStats
 
 _exclusive_sum = jax.jit(exclusive_sum_in_place, donate_argnums=0)
+
+# Learned bin-count buckets carry headroom over the observed counts so
+# steady-state bin-size jitter stays inside the schedule: padding rows are
+# masked grid steps, far cheaper than the steps-redo + recompile an
+# overflow costs (the §5.1/§5.6 memory-vs-retrace trade-off).
+_SCHEDULE_HEADROOM = 2.0
 
 
 class StepTimer:
@@ -70,17 +81,32 @@ class StepTimer:
 # Path 1: the faithful six-step host-orchestrated flow (paper Fig. 2).
 # ---------------------------------------------------------------------------
 
+def _floor_schedule(row_buckets, fall_cap, plan_buckets, plan_fall):
+    """Floor a freshly-derived phase schedule at the plan's learned one so
+    repeat shapes keep hitting the same per-kernel executables (and the
+    schedule only ever grows)."""
+    if plan_buckets is None:
+        return row_buckets, fall_cap
+    return (tuple(max(a, b) for a, b in zip(row_buckets, plan_buckets)),
+            max(fall_cap, plan_fall))
+
+
 def _execute_steps(A: CSR, B: CSR, plan: SpgemmPlan,
                    timer: StepTimer):
-    """Cold / hash / timing path.  Returns (result, prod_cap, nnz_cap).
+    """Cold / timing path.  Returns (result, prod_cap, nnz_cap, hash_sched).
 
     Identical math to the pre-engine ``core.spgemm`` flow, except the
     capacity buckets are floored at the plan's learned buckets so repeat
-    shapes keep hitting the same per-kernel executables.
+    shapes keep hitting the same per-kernel executables.  For the hash
+    method each phase derives its launch schedule ONCE (``host_schedule``,
+    with headroom, floored at the plan's), runs the schedule-driven
+    kernels with it, and the combined :class:`HashSchedule` is returned
+    for the caller to specialize the plan with (``None`` for ESC).
     """
     config = plan.config
     m = A.nrows
     sym_ladder, num_ladder = plan.sym_ladder, plan.num_ladder
+    sched = plan.hash_schedule
 
     # ---- step1: setup -----------------------------------------------------
     rpt_buf = nprod_into_rpt(A, B)               # n_prod lives in C.rpt (§5.3)
@@ -96,11 +122,16 @@ def _execute_steps(A: CSR, B: CSR, plan: SpgemmPlan,
                         next_bucket(max(total_nprod, 1)))
 
     # ---- step3: symbolic ----------------------------------------------------
+    sym_buckets = sym_fall = None
     if config.method == "hash":
-        from repro.kernels import spgemm_hash
-        nnz_buf = spgemm_hash.symbolic_binned(
+        sym_buckets, sym_fall = _floor_schedule(
+            *spgemm_hash.host_schedule(A, B, sym_binning, sym_ladder,
+                                       headroom=_SCHEDULE_HEADROOM),
+            sched.sym_row_buckets if sched else None,
+            sched.sym_fall_prod_bucket if sched else 0)
+        nnz_buf, _, _ = spgemm_hash.symbolic_scheduled(
             A, B, sym_binning, sym_ladder,
-            prod_capacity=prod_capacity,
+            row_buckets=sym_buckets, fallback_prod_capacity=sym_fall,
             single_access=config.hash_single_access,
             interpret=config.interpret)
     else:
@@ -119,13 +150,21 @@ def _execute_steps(A: CSR, B: CSR, plan: SpgemmPlan,
     timer.measure("numeric_binning", num_binning.bins)
 
     # ---- step6: numeric -----------------------------------------------------
+    hash_sched = None
     if config.method == "hash":
-        from repro.kernels import spgemm_hash
-        C = spgemm_hash.numeric_binned(
+        num_buckets, num_fall = _floor_schedule(
+            *spgemm_hash.host_schedule(A, B, num_binning, num_ladder,
+                                       headroom=_SCHEDULE_HEADROOM),
+            sched.num_row_buckets if sched else None,
+            sched.num_fall_prod_bucket if sched else 0)
+        C, _, _ = spgemm_hash.numeric_scheduled(
             A, B, rpt, num_binning, num_ladder,
-            prod_capacity=prod_capacity, nnz_capacity=nnz_capacity,
+            row_buckets=num_buckets, nnz_capacity=nnz_capacity,
+            fallback_prod_capacity=num_fall,
             single_access=config.hash_single_access,
             interpret=config.interpret)
+        hash_sched = HashSchedule(sym_buckets, num_buckets,
+                                  sym_fall, num_fall)
     elif config.fuse_esc:
         C = esc.spgemm_fused(A, B, prod_capacity=prod_capacity,
                              nnz_capacity=nnz_capacity)
@@ -138,7 +177,7 @@ def _execute_steps(A: CSR, B: CSR, plan: SpgemmPlan,
         C=C, total_nprod=total_nprod, total_nnz=total_nnz,
         sym_binning=sym_binning, num_binning=num_binning,
         timings=timer.timings)
-    return result, prod_capacity, nnz_capacity
+    return result, prod_capacity, nnz_capacity, hash_sched
 
 
 # ---------------------------------------------------------------------------
@@ -183,6 +222,57 @@ def _build_hot_executable(plan: SpgemmPlan) -> Callable:
             C = esc.numeric(A, B, rpt, prod_capacity=prod_cap,
                             nnz_capacity=nnz_cap)
         return C, total_nprod, total_nnz, sym_binning, num_binning
+
+    return run
+
+
+def _build_hash_executable(plan: SpgemmPlan) -> Callable:
+    """Jit the whole hash pipeline against a specialized plan (§5.1–§5.5).
+
+    The plan's :class:`HashSchedule` makes the per-rung launch loop a
+    static schedule (fixed-capacity ``pallas_call`` per populated rung,
+    largest rung first), so the two binnings, every hash kernel, and the
+    ESC fallback rung all trace into ONE executable — the hash method's
+    zero-retrace steady state.  The returned device scalars (totals, bin
+    sizes via the binnings, fallback sub-products) let finalize verify
+    the whole schedule in its single host sync.
+    """
+    assert plan.is_specialized and plan.config.method == "hash"
+    m = plan.a_sig.nrows
+    config = plan.config
+    sym_ladder, num_ladder = plan.sym_ladder, plan.num_ladder
+    sched = plan.hash_schedule
+    nnz_cap = plan.nnz_bucket
+    key = plan.signature
+
+    @jax.jit
+    def run(A: CSR, B: CSR):
+        stats_mod.record_trace(key)      # fires once per trace (recompile)
+        rpt_buf = nprod_into_rpt(A, B)
+        nprod = rpt_buf[:m]
+        total_nprod = jnp.sum(nprod)
+        sym_binning = bin_rows(nprod, upper=sym_ladder.upper,
+                               num_bins=sym_ladder.num_bins)
+        nnz_buf, sym_fall_prod, _ = spgemm_hash.symbolic_scheduled(
+            A, B, sym_binning, sym_ladder,
+            row_buckets=sched.sym_row_buckets,
+            fallback_prod_capacity=sched.sym_fall_prod_bucket,
+            single_access=config.hash_single_access,
+            interpret=config.interpret)
+        nnz = nnz_buf[:m]
+        num_binning = bin_rows(nnz, upper=num_ladder.upper,
+                               num_bins=num_ladder.num_bins)
+        total_nnz = jnp.sum(nnz)
+        rpt = exclusive_sum_in_place(nnz_buf)
+        C, num_fall_prod, _ = spgemm_hash.numeric_scheduled(
+            A, B, rpt, num_binning, num_ladder,
+            row_buckets=sched.num_row_buckets,
+            nnz_capacity=nnz_cap,
+            fallback_prod_capacity=sched.num_fall_prod_bucket,
+            single_access=config.hash_single_access,
+            interpret=config.interpret)
+        return (C, total_nprod, total_nnz, sym_binning, num_binning,
+                sym_fall_prod, num_fall_prod)
 
     return run
 
@@ -337,21 +427,28 @@ class SpgemmEngine:
         B = B.with_capacity(b_sig.cap_bucket)
 
         plan = entry.plan
-        hot_eligible = (plan.is_specialized and config.method == "esc"
+        hot_eligible = (plan.is_specialized
+                        and config.method in ("esc", "hash")
                         and not config.timing)
         if not hot_eligible:
-            result, prod_cap, nnz_cap = _execute_steps(
+            result, prod_cap, nnz_cap, hash_sched = _execute_steps(
                 A, B, plan, StepTimer(config.timing))
             if not plan.is_specialized:
-                # Progressive allocation: learn the buckets for steady state.
-                self.cache.specialize(
-                    entry, plan.with_capacities(prod_cap, nnz_cap))
+                # Progressive allocation: learn the buckets (and, for the
+                # hash method, the launch schedule the run just used) for
+                # steady state.
+                specialized = plan.with_capacities(prod_cap, nnz_cap)
+                if hash_sched is not None:
+                    specialized = specialized.with_hash_schedule(hash_sched)
+                self.cache.specialize(entry, specialized)
             entry.stats.steps_calls += 1
             entry.stats.time_s += time.perf_counter() - t0
             return _Finished(uid, result)
 
         if entry.executable is None:
-            entry.executable = _build_hot_executable(plan)
+            builder = (_build_hash_executable if config.method == "hash"
+                       else _build_hot_executable)
+            entry.executable = builder(plan)
         handles = entry.executable(A, B)         # async dispatch, no sync
         entry.stats.hot_calls += 1
         return _Pending(uid, entry, plan, A, B, handles, t0)
@@ -360,40 +457,69 @@ class SpgemmEngine:
         if isinstance(rec, _Finished):
             return rec.result
 
-        C, tnp, tnz, sym_binning, num_binning = rec.handles
-        total_nprod, total_nnz = (
-            int(x) for x in jax.device_get((tnp, tnz)))  # the ONE host sync
         # Verify against the DISPATCH-TIME plan: a concurrent overflow may
         # have re-specialized the entry with larger buckets than this run
         # actually executed with, and passing its check would return a
         # silently truncated C.
         plan = rec.plan
-        if (total_nprod > plan.prod_bucket or total_nnz > plan.nnz_bucket):
-            # Bucket overflow (rare: a same-signature request with a larger
-            # product).  Grow the buckets and redo via the steps path.
-            self.stats.capacity_grows += 1
-            rec.entry.stats.capacity_grows += 1
-            # NB: an overflowed symbolic phase truncates its expansion, so
-            # the hot run's totals are only lower bounds; the steps redo
-            # reports the true capacities to respecialize with.  Floor at
-            # the entry's CURRENT buckets so a concurrent grow is kept.
-            current = rec.entry.plan
-            grown = plan.with_capacities(
-                max(plan.prod_bucket, current.prod_bucket or 0,
-                    next_bucket(max(total_nprod, 1))),
-                max(plan.nnz_bucket, current.nnz_bucket or 0,
-                    next_bucket(max(total_nnz, 1))))
-            result, prod_cap, nnz_cap = _execute_steps(
-                rec.A, rec.B, grown, StepTimer(False))
-            self.cache.specialize(
-                rec.entry, grown.with_capacities(prod_cap, nnz_cap))
-            rec.entry.stats.time_s += time.perf_counter() - rec.t0
-            return result
+        if plan.config.method == "hash":
+            (C, tnp, tnz, sym_binning, num_binning,
+             sym_fall, num_fall) = rec.handles
+            # The ONE host sync: totals + bin sizes + fallback products.
+            fetched = jax.device_get(
+                (tnp, tnz, sym_binning.bin_size, num_binning.bin_size,
+                 sym_fall, num_fall))
+            total_nprod, total_nnz = int(fetched[0]), int(fetched[1])
+            schedule_ok = plan.hash_schedule.admits(
+                fetched[2], fetched[3], int(fetched[4]), int(fetched[5]))
+            if not schedule_ok:
+                self.stats.bin_overflows += 1
+                rec.entry.stats.bin_overflows += 1
+            if not schedule_ok or total_nnz > plan.nnz_bucket:
+                return self._grow_and_redo(rec, total_nprod, total_nnz)
+        else:
+            C, tnp, tnz, sym_binning, num_binning = rec.handles
+            total_nprod, total_nnz = (
+                int(x) for x in jax.device_get((tnp, tnz)))  # ONE host sync
+            if (total_nprod > plan.prod_bucket
+                    or total_nnz > plan.nnz_bucket):
+                return self._grow_and_redo(rec, total_nprod, total_nnz)
 
         rec.entry.stats.time_s += time.perf_counter() - rec.t0
         return SpgemmResult(
             C=C, total_nprod=total_nprod, total_nnz=total_nnz,
             sym_binning=sym_binning, num_binning=num_binning, timings={})
+
+    def _grow_and_redo(self, rec: _Pending, total_nprod: int,
+                       total_nnz: int) -> SpgemmResult:
+        """Overflow recovery (rare: a same-signature request outgrew the
+        learned plan).  Grow the buckets, redo via the steps path, and
+        re-specialize the entry so the NEXT request is hot again."""
+        plan = rec.plan
+        self.stats.capacity_grows += 1
+        rec.entry.stats.capacity_grows += 1
+        # NB: an overflowed hot run truncates its expansion (or drops rows
+        # past a bin bucket), so its totals are only lower bounds; the
+        # steps redo reports the true capacities to respecialize with.
+        # Floor at the entry's CURRENT buckets so a concurrent grow is kept.
+        current = rec.entry.plan
+        grown = plan.with_capacities(
+            max(plan.prod_bucket, current.prod_bucket or 0,
+                next_bucket(max(total_nprod, 1))),
+            max(plan.nnz_bucket, current.nnz_bucket or 0,
+                next_bucket(max(total_nnz, 1))))
+        result, prod_cap, nnz_cap, hash_sched = _execute_steps(
+            rec.A, rec.B, grown, StepTimer(False))
+        respecialized = grown.with_capacities(prod_cap, nnz_cap)
+        if hash_sched is not None:
+            # The redo floored at the DISPATCH plan's schedule; union with
+            # the entry's CURRENT one so a concurrent grow is kept too.
+            if current.hash_schedule is not None:
+                hash_sched = hash_sched.union(current.hash_schedule)
+            respecialized = respecialized.with_hash_schedule(hash_sched)
+        self.cache.specialize(rec.entry, respecialized)
+        rec.entry.stats.time_s += time.perf_counter() - rec.t0
+        return result
 
 
 # ---------------------------------------------------------------------------

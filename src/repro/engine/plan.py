@@ -53,6 +53,55 @@ PlanKey = Tuple[MatrixSig, MatrixSig, SpgemmConfig]
 
 
 @dataclasses.dataclass(frozen=True)
+class HashSchedule:
+    """Learned static launch schedule for the hash method (§5.1, §5.5).
+
+    The paper's per-call host decision — which bin kernels to launch, with
+    how many rows each — becomes part of the specialized plan: a pow-2
+    row-count bucket per rung of each ladder (last entry = the ESC
+    fallback rung; 0 = rung statically absent) plus pow-2 capacities for
+    the fallback rung's sub-product expansions.  With these static, the
+    whole hash pipeline traces into one executable; the engine's finalize
+    sync verifies the actual bin sizes fit and grows the schedule
+    (monotonically, via :meth:`union`) on overflow.
+    """
+
+    sym_row_buckets: Tuple[int, ...]
+    num_row_buckets: Tuple[int, ...]
+    sym_fall_prod_bucket: int
+    num_fall_prod_bucket: int
+
+    def union(self, other: "HashSchedule") -> "HashSchedule":
+        """Elementwise max — schedules only ever grow (progressive
+        allocation; keeps every previously-admitted request admitted)."""
+        return HashSchedule(
+            sym_row_buckets=tuple(
+                max(a, b) for a, b in zip(self.sym_row_buckets,
+                                          other.sym_row_buckets)),
+            num_row_buckets=tuple(
+                max(a, b) for a, b in zip(self.num_row_buckets,
+                                          other.num_row_buckets)),
+            sym_fall_prod_bucket=max(self.sym_fall_prod_bucket,
+                                     other.sym_fall_prod_bucket),
+            num_fall_prod_bucket=max(self.num_fall_prod_bucket,
+                                     other.num_fall_prod_bucket),
+        )
+
+    def admits(self, sym_bin_sizes, num_bin_sizes, sym_fall_prod: int,
+               num_fall_prod: int) -> bool:
+        """Whether an executed run's observed bin metadata fit the static
+        schedule it was dispatched with (rows beyond a bucket — or
+        fallback products beyond their capacity — were truncated)."""
+        return (
+            all(int(s) <= b for s, b in zip(sym_bin_sizes,
+                                            self.sym_row_buckets))
+            and all(int(s) <= b for s, b in zip(num_bin_sizes,
+                                                self.num_row_buckets))
+            and int(sym_fall_prod) <= self.sym_fall_prod_bucket
+            and int(num_fall_prod) <= self.num_fall_prod_bucket)
+
+
+@dataclasses.dataclass(frozen=True)
 class SpgemmPlan:
     """Immutable pre-data execution plan for one (A_sig, B_sig, config).
 
@@ -69,6 +118,8 @@ class SpgemmPlan:
                        expansion (``None`` until learned).
       nnz_bucket       pow-2 capacity for C.col/C.val (``None`` until
                        learned).
+      hash_schedule    static per-rung launch schedule (hash method only;
+                       ``None`` until learned — ESC plans never set it).
     """
 
     a_sig: MatrixSig
@@ -80,6 +131,7 @@ class SpgemmPlan:
     num_workspace: WorkspacePlan
     prod_bucket: Optional[int] = None
     nnz_bucket: Optional[int] = None
+    hash_schedule: Optional[HashSchedule] = None
 
     @property
     def signature(self) -> PlanKey:
@@ -88,14 +140,22 @@ class SpgemmPlan:
 
     @property
     def is_specialized(self) -> bool:
-        """True once the capacity buckets have been learned."""
-        return self.prod_bucket is not None and self.nnz_bucket is not None
+        """True once everything the jitted steady state needs is learned —
+        the capacity buckets, plus the launch schedule for hash plans."""
+        caps = self.prod_bucket is not None and self.nnz_bucket is not None
+        if self.config.method == "hash":
+            return caps and self.hash_schedule is not None
+        return caps
 
     def with_capacities(self, prod_bucket: int,
                         nnz_bucket: int) -> "SpgemmPlan":
         """Specialized plan with learned (or grown) capacity buckets."""
         return dataclasses.replace(self, prod_bucket=int(prod_bucket),
                                    nnz_bucket=int(nnz_bucket))
+
+    def with_hash_schedule(self, schedule: HashSchedule) -> "SpgemmPlan":
+        """Plan with a learned (or grown) static hash launch schedule."""
+        return dataclasses.replace(self, hash_schedule=schedule)
 
     def admits(self, A: CSR, B: CSR) -> bool:
         """Whether (A, B) land in this plan's shape buckets."""

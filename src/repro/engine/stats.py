@@ -50,6 +50,7 @@ class PlanStats:
     hot_calls: int = 0        # served by the jitted steady-state executable
     steps_calls: int = 0      # served by the host-orchestrated six-step path
     capacity_grows: int = 0   # bucket overflows that forced a re-plan
+    bin_overflows: int = 0    # hash bin-count/fallback schedule overflows
     time_s: float = 0.0       # wall-clock charged to this plan
 
 
@@ -60,6 +61,7 @@ class EngineStats:
     requests: int = 0
     overlapped: int = 0       # request k+1 planned while k ran on device
     capacity_grows: int = 0
+    bin_overflows: int = 0    # hash launch-schedule overflows (subset of grows)
     drains: int = 0
 
 
@@ -74,16 +76,23 @@ def render(engine) -> str:
             cache.hits, cache.misses, cache.evictions,
             100.0 * cache.hit_rate),
         "overlap: %d requests planned while predecessor executed" % s.overlapped,
-        "recompiles: %d hot-path traces, %d capacity grows" % (
-            total_traces(), s.capacity_grows),
+        "recompiles: %d hot-path traces, %d capacity grows "
+        "(%d hash bin overflows)" % (
+            total_traces(), s.capacity_grows, s.bin_overflows),
     ]
     for key, entry in cache.items():
         ps = entry.stats
         p = entry.plan
+        sched = ""
+        if p.hash_schedule is not None:
+            hs = p.hash_schedule
+            sched = ", sched sym=%s num=%s" % (
+                "/".join(str(b) for b in hs.sym_row_buckets),
+                "/".join(str(b) for b in hs.num_row_buckets))
         lines.append(
             "  plan %dx%d·%dx%d %s: %d calls (%d hot / %d steps), "
-            "buckets prod=%s nnz=%s, %.1f ms total" % (
+            "buckets prod=%s nnz=%s%s, %.1f ms total" % (
                 p.a_sig.nrows, p.a_sig.ncols, p.b_sig.nrows, p.b_sig.ncols,
                 p.config.method, ps.calls, ps.hot_calls, ps.steps_calls,
-                p.prod_bucket, p.nnz_bucket, ps.time_s * 1e3))
+                p.prod_bucket, p.nnz_bucket, sched, ps.time_s * 1e3))
     return "\n".join(lines)

@@ -2,10 +2,12 @@
 from __future__ import annotations
 
 from . import spgemm_hash
-from .spgemm_hash import (numeric_bin_call, numeric_binned, symbolic_bin_call,
-                          symbolic_binned)
+from .spgemm_hash import (host_schedule, numeric_bin_call, numeric_binned,
+                          numeric_scheduled, symbolic_bin_call,
+                          symbolic_binned, symbolic_scheduled)
 
 __all__ = [
     "spgemm_hash", "symbolic_bin_call", "numeric_bin_call",
     "symbolic_binned", "numeric_binned",
+    "symbolic_scheduled", "numeric_scheduled", "host_schedule",
 ]

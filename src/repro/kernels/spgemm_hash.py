@@ -49,10 +49,12 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core import esc
 from repro.core.binning import Binning
 from repro.core.binning_ranges import BinLadder
-from repro.core.csr import CSR
+from repro.core.csr import CSR, gather_rows
+from repro.core.workspace import next_bucket
 
 HASH_SCALE = 107  # nsparse's multiplicative constant, kept (§5.2 "same way")
 _PROBE_GUARD_FACTOR = 2  # safety: bail after 2*t_size probes (misuse guard)
+_ROW_BUCKET_MIN = 8      # smallest per-rung row-count bucket
 
 INT32_MAX = np.iinfo(np.int32).max
 
@@ -342,72 +344,128 @@ def numeric_epilogue(col_tabs, val_tabs, bin_rows, count, rpt, c_col, c_val,
 
 
 # ---------------------------------------------------------------------------
-# Binned drivers (called by core.spgemm with method="hash").
+# Schedule-driven drivers (called by the engine and by the binned wrappers).
+#
+# The launch schedule — which rungs run, with how many (padded) rows each —
+# used to be a per-call host decision (``np.asarray(binning.bin_size)``).
+# It is now a STATIC argument: ``row_buckets`` gives a pow-2 row-count
+# capacity per rung (last entry = the ESC fallback rung), 0 meaning the
+# rung is statically absent.  With the schedule static the whole phase is
+# one traceable function with zero host syncs; callers verify afterwards
+# that the actual bin sizes fit the buckets (the engine folds that check
+# into its single finalize sync and grows the plan on overflow).
 # ---------------------------------------------------------------------------
 
-def _bin_schedule(binning: Binning, ladder: BinLadder):
-    """Host-side launch plan.  LARGEST bins first — the §5.5 launch-order
-    rule (the long pole starts earliest; no host sync until all bins are
-    dispatched)."""
-    bin_sizes = np.asarray(binning.bin_size)   # host sync: launch params
-    order = list(range(len(ladder.table_sizes)))[::-1]
-    return [(b, int(bin_sizes[b])) for b in order if bin_sizes[b] > 0], \
-        int(bin_sizes[len(ladder.table_sizes)])
-
-
-def _fallback_rows(binning: Binning, ladder: BinLadder, fall_count: int,
-                   m: int):
+def _fallback_rows(binning: Binning, ladder: BinLadder, cap: int, m: int):
+    """Fallback-rung row ids padded to static ``cap`` (+ validity mask)."""
     fallback_bin = len(ladder.table_sizes)
-    cap = _next_bucket(fall_count)
-    rows, _ = binning.rows_of_bin(fallback_bin, cap)
-    valid = jnp.arange(cap, dtype=jnp.int32) < fall_count
+    rows, count = binning.rows_of_bin(fallback_bin, cap)
+    valid = jnp.arange(cap, dtype=jnp.int32) < count
     return jnp.where(valid, rows, m), valid
 
 
-def _next_bucket(n: int, minimum: int = 8) -> int:
-    b = minimum
-    while b < n:
-        b <<= 1
-    return b
+def _check_schedule(row_buckets, ladder: BinLadder, fallback_prod_capacity):
+    assert len(row_buckets) == ladder.num_bins, (row_buckets, ladder)
+    assert not row_buckets[-1] or fallback_prod_capacity > 0, \
+        "active fallback rung needs a sub-product capacity"
 
 
-def symbolic_binned(A: CSR, B: CSR, binning: Binning, ladder: BinLadder, *,
-                    prod_capacity: int, single_access: bool = True,
-                    interpret: bool = True,
-                    collect_accesses: bool = False):
-    """Symbolic phase over all bins.  Returns the (M+1,) n_nz buffer
-    (optionally also the total table-access count)."""
+def symbolic_scheduled(A: CSR, B: CSR, binning: Binning, ladder: BinLadder,
+                       *, row_buckets, fallback_prod_capacity: int = 0,
+                       single_access: bool = True, interpret: bool = True,
+                       collect_accesses: bool = False):
+    """Symbolic phase over a static bucketed schedule — fully traceable.
+
+    Rungs are dispatched LARGEST first (the §5.5 launch-order rule: the
+    long pole starts earliest), beginning with the ESC fallback rung.
+    Returns ``(nnz_buf, sub_prod, accesses)`` where ``sub_prod`` is the
+    fallback rung's intermediate-product total (a device scalar the
+    caller verifies against ``fallback_prod_capacity``; an overflowed
+    fallback truncates its expansion, so results are only trustworthy
+    when the check passes).
+    """
+    _check_schedule(row_buckets, ladder, fallback_prod_capacity)
     m = A.nrows
     nnz_buf = jnp.zeros(m + 1, dtype=jnp.int32)
     accesses = jnp.int32(0)
-    schedule, fall_count = _bin_schedule(binning, ladder)
+    sub_prod = jnp.int32(0)
 
-    for b, cnt in schedule:
-        rows_cap = _next_bucket(cnt)
-        rows, _ = binning.rows_of_bin(b, rows_cap)
-        count = jnp.asarray([cnt], jnp.int32)
+    if row_buckets[-1]:
+        # Global-memory-analog rung: ESC on the gathered sub-matrix.
+        rows, valid = _fallback_rows(binning, ladder, row_buckets[-1], m)
+        sub = gather_rows(A, rows, valid)
+        sub_prod = jnp.sum(
+            jnp.where(valid, nprod_of_rows(A, B, rows), 0)).astype(jnp.int32)
+        sub_nnz = esc.symbolic(sub, B, prod_capacity=fallback_prod_capacity)
+        tgt = jnp.where(valid, rows, m + 1)
+        nnz_buf = nnz_buf.at[tgt].set(sub_nnz[:rows.shape[0]], mode="drop")
+
+    for b in range(len(ladder.table_sizes) - 1, -1, -1):
+        rows_cap = row_buckets[b]
+        if not rows_cap:
+            continue
+        rows, count = binning.rows_of_bin(b, rows_cap)
         nnz_bin, acc_bin = symbolic_bin_call(
-            rows, count, A.rpt, A.col, B.rpt, B.col,
+            rows, count.reshape(1), A.rpt, A.col, B.rpt, B.col,
             t_size=ladder.table_sizes[b], rows_cap=rows_cap,
             single_access=single_access, interpret=interpret)
-        valid = jnp.arange(rows_cap, dtype=jnp.int32) < cnt
+        valid = jnp.arange(rows_cap, dtype=jnp.int32) < count
         tgt = jnp.where(valid, rows, m + 1)
         nnz_buf = nnz_buf.at[tgt].set(nnz_bin, mode="drop")
         if collect_accesses:
             accesses = accesses + jnp.sum(jnp.where(valid, acc_bin, 0))
 
-    if fall_count:
-        # Global-memory-analog rung: ESC on the gathered sub-matrix.
-        from repro.core.csr import gather_rows
-        rows, valid = _fallback_rows(binning, ladder, fall_count, m)
-        sub = gather_rows(A, rows, valid)
-        sub_prod = int(jnp.sum(
-            jnp.where(valid, nprod_of_rows(A, B, rows), 0)))
-        sub_nnz = esc.symbolic(sub, B,
-                               prod_capacity=_next_bucket(max(sub_prod, 1)))
-        tgt = jnp.where(valid, rows, m + 1)
-        nnz_buf = nnz_buf.at[tgt].set(sub_nnz[:rows.shape[0]], mode="drop")
+    return nnz_buf, sub_prod, accesses
 
+
+def host_schedule(A: CSR, B: CSR, binning: Binning, ladder: BinLadder, *,
+                  headroom: float = 1.0):
+    """Host-side schedule derivation (the cold path's ONE metadata sync).
+
+    Reads the device bin sizes, buckets each rung's row count to a pow-2
+    capacity (0 = empty rung, statically skipped), and — when the
+    fallback rung is populated — syncs its sub-product total to size the
+    ESC expansion.  ``headroom`` over-provisions the buckets (the engine
+    learns schedules with headroom so steady-state bin-count jitter stays
+    inside the learned buckets instead of forcing retraces: padding rows
+    are masked grid steps, far cheaper than a recompile).
+    """
+    sizes = np.asarray(binning.bin_size)       # host sync: launch schedule
+    m_cap = next_bucket(binning.bins.shape[0], minimum=_ROW_BUCKET_MIN)
+    row_buckets = tuple(
+        min(m_cap, next_bucket(int(np.ceil(int(s) * headroom)),
+                               minimum=_ROW_BUCKET_MIN)) if s else 0
+        for s in sizes)
+    fallback_prod_capacity = 0
+    if row_buckets[-1]:
+        rows, valid = _fallback_rows(binning, ladder, row_buckets[-1],
+                                     A.nrows)
+        sub_prod = int(jnp.sum(                # host sync: fallback alloc
+            jnp.where(valid, nprod_of_rows(A, B, rows), 0)))
+        fallback_prod_capacity = next_bucket(
+            int(np.ceil(max(sub_prod, 1) * headroom)),
+            minimum=_ROW_BUCKET_MIN)
+    return row_buckets, fallback_prod_capacity
+
+
+def symbolic_binned(A: CSR, B: CSR, binning: Binning, ladder: BinLadder, *,
+                    prod_capacity: int = 0, single_access: bool = True,
+                    interpret: bool = True,
+                    collect_accesses: bool = False):
+    """Host-orchestrated symbolic phase (cold / standalone path).
+
+    Syncs the bin sizes once to derive an exact bucketed schedule, then
+    runs the traceable ``symbolic_scheduled`` form.  Returns the (M+1,)
+    n_nz buffer (optionally also the total table-access count).
+    ``prod_capacity`` is unused (kept for signature compatibility: the
+    hash rungs size their tables from the ladder, not the expansion).
+    """
+    del prod_capacity
+    row_buckets, fall_cap = host_schedule(A, B, binning, ladder)
+    nnz_buf, _, accesses = symbolic_scheduled(
+        A, B, binning, ladder, row_buckets=row_buckets,
+        fallback_prod_capacity=fall_cap, single_access=single_access,
+        interpret=interpret, collect_accesses=collect_accesses)
     if collect_accesses:
         return nnz_buf, accesses
     return nnz_buf
@@ -427,46 +485,73 @@ def nprod_of_rows(A: CSR, B: CSR, rows: jax.Array) -> jax.Array:
     return jax.vmap(per_row)(lo, hi)
 
 
-def numeric_binned(A: CSR, B: CSR, rpt: jax.Array, binning: Binning,
-                   ladder: BinLadder, *, prod_capacity: int,
-                   nnz_capacity: int, single_access: bool = True,
-                   interpret: bool = True,
-                   collect_accesses: bool = False):
-    """Numeric phase over all bins -> CSR (optionally + access total)."""
+def numeric_scheduled(A: CSR, B: CSR, rpt: jax.Array, binning: Binning,
+                      ladder: BinLadder, *, row_buckets,
+                      nnz_capacity: int, fallback_prod_capacity: int = 0,
+                      single_access: bool = True, interpret: bool = True,
+                      collect_accesses: bool = False):
+    """Numeric phase over a static bucketed schedule — fully traceable.
+
+    Mirrors ``symbolic_scheduled``: per-rung fixed-capacity kernels,
+    largest rung (the ESC fallback) first, no host syncs.  Returns
+    ``(C, sub_prod, accesses)``; the caller verifies ``sub_prod`` against
+    ``fallback_prod_capacity`` (overflow truncates the fallback rows).
+    """
+    _check_schedule(row_buckets, ladder, fallback_prod_capacity)
     m, n = A.nrows, B.ncols
     c_col = jnp.zeros(nnz_capacity, jnp.int32)
     c_val = jnp.zeros(nnz_capacity, A.val.dtype)
     accesses = jnp.int32(0)
-    schedule, fall_count = _bin_schedule(binning, ladder)
+    sub_prod = jnp.int32(0)
 
-    for b, cnt in schedule:
-        rows_cap = _next_bucket(cnt)
-        rows, _ = binning.rows_of_bin(b, rows_cap)
-        count = jnp.asarray([cnt], jnp.int32)
-        col_tabs, val_tabs, acc_bin = numeric_bin_call(
-            rows, count, A.rpt, A.col, A.val, B.rpt, B.col, B.val,
-            t_size=ladder.table_sizes[b], rows_cap=rows_cap,
-            single_access=single_access, interpret=interpret)
-        c_col, c_val = numeric_epilogue(
-            col_tabs, val_tabs, rows, jnp.int32(cnt), rpt, c_col, c_val,
-            nnz_capacity=nnz_capacity)
-        if collect_accesses:
-            valid = jnp.arange(rows_cap, dtype=jnp.int32) < cnt
-            accesses = accesses + jnp.sum(jnp.where(valid, acc_bin, 0))
-
-    if fall_count:
-        from repro.core.csr import gather_rows
-        rows, valid = _fallback_rows(binning, ladder, fall_count, m)
+    if row_buckets[-1]:
+        rows, valid = _fallback_rows(binning, ladder, row_buckets[-1], m)
         sub = gather_rows(A, rows, valid)
-        sub_prod = int(jnp.sum(
-            jnp.where(valid, nprod_of_rows(A, B, rows), 0)))
-        sub_cap = _next_bucket(max(sub_prod, 1))
-        subC = esc.spgemm_fused(sub, B, prod_capacity=sub_cap,
-                                nnz_capacity=sub_cap)
+        sub_prod = jnp.sum(
+            jnp.where(valid, nprod_of_rows(A, B, rows), 0)).astype(jnp.int32)
+        subC = esc.spgemm_fused(sub, B,
+                                prod_capacity=fallback_prod_capacity,
+                                nnz_capacity=fallback_prod_capacity)
         c_col, c_val = scatter_sub_rows(
             subC, rows, valid, rpt, c_col, c_val, nnz_capacity=nnz_capacity)
 
+    for b in range(len(ladder.table_sizes) - 1, -1, -1):
+        rows_cap = row_buckets[b]
+        if not rows_cap:
+            continue
+        rows, count = binning.rows_of_bin(b, rows_cap)
+        col_tabs, val_tabs, acc_bin = numeric_bin_call(
+            rows, count.reshape(1), A.rpt, A.col, A.val, B.rpt, B.col, B.val,
+            t_size=ladder.table_sizes[b], rows_cap=rows_cap,
+            single_access=single_access, interpret=interpret)
+        c_col, c_val = numeric_epilogue(
+            col_tabs, val_tabs, rows, count, rpt, c_col, c_val,
+            nnz_capacity=nnz_capacity)
+        if collect_accesses:
+            valid = jnp.arange(rows_cap, dtype=jnp.int32) < count
+            accesses = accesses + jnp.sum(jnp.where(valid, acc_bin, 0))
+
     C = CSR(rpt=rpt, col=c_col, val=c_val, shape=(m, n))
+    return C, sub_prod, accesses
+
+
+def numeric_binned(A: CSR, B: CSR, rpt: jax.Array, binning: Binning,
+                   ladder: BinLadder, *, prod_capacity: int = 0,
+                   nnz_capacity: int, single_access: bool = True,
+                   interpret: bool = True,
+                   collect_accesses: bool = False):
+    """Host-orchestrated numeric phase (cold / standalone path) -> CSR.
+
+    Schedule derivation as in ``symbolic_binned``; ``prod_capacity`` is
+    unused (signature compatibility).
+    """
+    del prod_capacity
+    row_buckets, fall_cap = host_schedule(A, B, binning, ladder)
+    C, _, accesses = numeric_scheduled(
+        A, B, rpt, binning, ladder, row_buckets=row_buckets,
+        nnz_capacity=nnz_capacity, fallback_prod_capacity=fall_cap,
+        single_access=single_access, interpret=interpret,
+        collect_accesses=collect_accesses)
     if collect_accesses:
         return C, accesses
     return C

@@ -180,6 +180,102 @@ def test_repeated_shape_triggers_zero_retraces():
     assert engine.cache.hits >= 4
 
 
+@pytest.mark.parametrize("dist", ["uniform", "powerlaw"])
+def test_hash_engine_matches_oracle_cold_and_hot(dist):
+    """The hash method now has a jitted steady state, like ESC."""
+    engine = SpgemmEngine(SpgemmConfig(method="hash"))
+    A, B = _pair(7, dist=dist)
+    ref = np.asarray(spgemm_reference(A, B))
+    r_cold = engine.execute(A, B)       # steps path (learns the schedule)
+    r_hot = engine.execute(A, B)        # jitted steady-state path
+    np.testing.assert_allclose(np.asarray(r_cold.C.to_dense()), ref,
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(r_hot.C.to_dense()), ref,
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(r_cold.C.rpt),
+                                  np.asarray(r_hot.C.rpt))
+    assert r_cold.total_nnz == r_hot.total_nnz
+    entry = next(iter(engine.cache.items()))[1]
+    assert entry.stats.steps_calls == 1 and entry.stats.hot_calls == 1
+    assert entry.plan.hash_schedule is not None
+
+
+def test_hash_repeated_shape_triggers_zero_retraces():
+    """Zero-retrace regression for the hash steady state (mirrors the ESC
+    one above): after warmup, same-bucket repeats reuse ONE executable.
+
+    Warmup covers rung DISCOVERY: a rung the first matrix left empty is
+    learned as statically absent, so the first stream member that
+    populates it costs one schedule grow (+1 retrace on the rebuild) —
+    the documented bin-count-bucketing trade-off.  The steady-state
+    guarantee starts once the schedule has seen the stream's rungs.
+    """
+    engine = SpgemmEngine(SpgemmConfig(method="hash"))
+    A, B = _pair(80)
+    cap_a, cap_b = MatrixSig.of(A).cap_bucket, MatrixSig.of(B).cap_bucket
+
+    def run(seed):
+        A2, B2 = _pair(seed)
+        r = engine.execute(A2.with_capacity(cap_a), B2.with_capacity(cap_b))
+        ref = np.asarray(spgemm_reference(A2, B2))
+        np.testing.assert_allclose(np.asarray(r.C.to_dense()), ref,
+                                   rtol=1e-5, atol=1e-5)
+
+    seeds = (90, 91, 92, 93)
+    engine.execute(A, B)                   # cold: steps path, no hot trace
+    for s in seeds:                        # warmup pass: rung discovery may
+        run(s)                             #   grow the schedule (retraces ok)
+    run(seeds[0])                          # rebuild after any final grow
+    baseline = total_traces()
+    grows = engine.stats.capacity_grows
+    for s in seeds:                        # replay: monotone schedule growth
+        run(s)                             #   admits everything seen before
+    assert total_traces() == baseline      # zero retraces on the replay
+    assert engine.stats.capacity_grows == grows   # and zero further grows
+    entry = next(iter(engine.cache.items()))[1]
+    assert entry.stats.hot_calls >= 5      # replay served from the hot path
+
+
+def test_hash_bin_bucket_growth_on_overflow():
+    """A same-signature request whose rows land in a rung the schedule
+    learned as empty must be detected (truncated hot run), redone via the
+    steps path, and must grow the schedule so the NEXT call is hot."""
+    m = 64
+    d_small = np.zeros((m, m), np.float32)
+    d_small[np.arange(m), np.arange(m)] = 1.0      # 1 nnz/row -> tiny nprod
+    d_big = np.zeros((m, m), np.float32)
+    d_big[:, :32] = 1.0                            # 32 nnz/row -> bigger rung
+    dB = np.eye(m, dtype=np.float32)               # 1 nnz/row keeps nprod=nnzA
+    A_small = CSR.from_dense(d_small).with_capacity(2048)
+    A_big = CSR.from_dense(d_big)                  # capacity 2048 naturally
+    Bc = CSR.from_dense(dB)
+    assert MatrixSig.of(A_small) == MatrixSig.of(A_big)
+
+    engine = SpgemmEngine(SpgemmConfig(method="hash"))
+    engine.execute(A_small, Bc)
+    engine.execute(A_small, Bc)            # hot path established
+    sched0 = next(iter(engine.cache.items()))[1].plan.hash_schedule
+    assert sched0.sym_row_buckets[1] == 0  # rung 1 statically absent
+
+    r = engine.execute(A_big, Bc)          # same plan, rows overflow rung 0
+    np.testing.assert_allclose(np.asarray(r.C.to_dense()), d_big @ dB,
+                               rtol=1e-5)
+    assert engine.stats.capacity_grows == 1
+    assert engine.stats.bin_overflows == 1
+    sched1 = next(iter(engine.cache.items()))[1].plan.hash_schedule
+    assert sched1.sym_row_buckets[1] >= 64       # rung 1 now scheduled
+    assert sched1.sym_row_buckets[0] >= sched0.sym_row_buckets[0]  # monotone
+
+    r2 = engine.execute(A_big, Bc)         # grown schedule now holds (hot)
+    np.testing.assert_allclose(np.asarray(r2.C.to_dense()), d_big @ dB,
+                               rtol=1e-5)
+    assert engine.stats.capacity_grows == 1
+    # The small request still runs correctly under the grown plan.
+    r3 = engine.execute(A_small, Bc)
+    np.testing.assert_allclose(np.asarray(r3.C.to_dense()), d_small @ dB,
+                               rtol=1e-5)
+
+
 def test_prewarm_skips_cold_discovery():
     engine = SpgemmEngine()
     A, B = _pair(120)

@@ -100,6 +100,93 @@ def test_pow2_and_mod_hash_paths():
         assert int(h2) == 0
 
 
+def test_scheduled_symbolic_matches_oracle_under_jit():
+    """Tentpole regression: the schedule-driven symbolic phase must trace
+    cleanly (zero host syncs) and agree with the oracle on a mixed bin
+    ladder that populates several rungs AND the ESC fallback rung."""
+    m = 96
+    A, B = _pair(9, m, 200, 150, 10.0, 8.0, dist="powerlaw")
+    nprod = nprod_into_rpt(A, B)[:m]
+    lad = make_ladder((32, 64, 128), 1.2, (32, 64, 128))
+    bn = bin_rows_for_ladder(nprod, lad)
+    row_buckets, fall_cap = spgemm_hash.host_schedule(A, B, bn, lad)
+    assert row_buckets[-1] > 0 and fall_cap > 0   # fallback rung exercised
+
+    @jax.jit
+    def sym(A, B, bn):
+        return spgemm_hash.symbolic_scheduled(
+            A, B, bn, lad, row_buckets=row_buckets,
+            fallback_prod_capacity=fall_cap)
+
+    nnz_buf, sub_prod, _ = sym(A, B, bn)
+    np.testing.assert_array_equal(np.asarray(nnz_buf[:m]),
+                                  kref.row_nnz_from_support(A, B))
+    assert 0 < int(sub_prod) <= fall_cap
+
+
+def test_scheduled_pipeline_hash_vs_esc_parity_under_jit():
+    """hash-vs-ESC oracle parity with BOTH phases jitted end-to-end on
+    tiny mixed ladders (multi-rung + fallback in each phase)."""
+    m, k, n = 80, 160, 120
+    A, B = _pair(17, m, k, n, 9.0, 7.0, dist="powerlaw")
+    sym_lad = make_ladder((32, 64, 128), 1.2, (32, 64, 128))
+    num_lad = make_ladder((32, 64, 128), 2.0, (31, 63, 127))
+
+    nprod = nprod_into_rpt(A, B)[:m]
+    sym_bn = bin_rows_for_ladder(nprod, sym_lad)
+    sym_buckets, sym_fall = spgemm_hash.host_schedule(A, B, sym_bn, sym_lad)
+    # Derive the numeric schedule from the (oracle) symbolic result so the
+    # jitted pipeline below is schedule-static, like the engine's hot path.
+    nnz_oracle = esc.symbolic(A, B, prod_capacity=next_bucket(8192))
+    num_bn = bin_rows_for_ladder(nnz_oracle[:m], num_lad)
+    num_buckets, num_fall = spgemm_hash.host_schedule(A, B, num_bn, num_lad)
+    nnz_cap = next_bucket(int(nnz_oracle.sum()))
+
+    @jax.jit
+    def pipeline(A, B):
+        nnz_buf, _, _ = spgemm_hash.symbolic_scheduled(
+            A, B, bin_rows_for_ladder(nprod_into_rpt(A, B)[:m], sym_lad,
+                                      allow_fast_path=False),
+            sym_lad, row_buckets=sym_buckets,
+            fallback_prod_capacity=sym_fall)
+        rpt = exclusive_sum_in_place(nnz_buf)
+        num_bn = bin_rows_for_ladder(nnz_buf[:m], num_lad,
+                                     allow_fast_path=False)
+        C, _, _ = spgemm_hash.numeric_scheduled(
+            A, B, rpt, num_bn, num_lad, row_buckets=num_buckets,
+            nnz_capacity=nnz_cap, fallback_prod_capacity=num_fall)
+        return C
+
+    C = pipeline(A, B)
+    esc_C = esc.spgemm_fused(A, B, prod_capacity=next_bucket(8192),
+                             nnz_capacity=nnz_cap)
+    ref = np.asarray(A.to_dense()) @ np.asarray(B.to_dense())
+    np.testing.assert_allclose(np.asarray(C.to_dense()), ref,
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(C.to_dense()),
+                               np.asarray(esc_C.to_dense()),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_host_schedule_headroom_and_caps():
+    """Learned buckets honor headroom, the pow-2 floor, and the row cap."""
+    m = 64
+    A, B = _pair(3, m, 64, 64, 4.0, 4.0)
+    nprod = nprod_into_rpt(A, B)[:m]
+    lad = symbolic_ladder(1.2)
+    bn = bin_rows_for_ladder(nprod, lad)
+    exact, _ = spgemm_hash.host_schedule(A, B, bn, lad)
+    padded, _ = spgemm_hash.host_schedule(A, B, bn, lad, headroom=2.0)
+    sizes = np.asarray(bn.bin_size)
+    m_cap = next_bucket(m, minimum=8)
+    for s, e, p in zip(sizes, exact, padded):
+        if not s:
+            assert e == 0 and p == 0
+            continue
+        assert e >= int(s) and e & (e - 1) == 0      # pow-2, admits count
+        assert p >= min(m_cap, 2 * int(s)) and p <= m_cap
+
+
 def test_numeric_epilogue_sorted_and_complete():
     m, k, n = 32, 32, 32
     A, B = _pair(33, m, k, n, 4.0, 4.0)
