@@ -12,9 +12,16 @@ exercises the bin-count-bucketed hash steady state: the warmup prefix may
 grow the learned launch schedule (rung discovery), after which the gate
 requires the jitted path to serve every request without recompiling.  A
 second phase pushes the same stream through ``submit``/``drain`` to
-exercise the batched, double-buffered path.
+exercise the batched, completion-order-finalized path.
 
-Run:  PYTHONPATH=src python benchmarks/bench_engine.py [--smoke] [--method hash]
+``--shards N`` (ISSUE 3) runs the whole stream through the partition-
+aware engine: every request fans out into N flop-balanced row-block
+shards whose plans must come from the cache (hit rate >=90% across shard
+plans, zero retraces after warmup), and the merged result must be
+bitwise-identical in nnz/structure to the unsharded path.
+
+Run:  PYTHONPATH=src python benchmarks/bench_engine.py [--smoke]
+          [--method hash] [--shards 2]
 """
 from __future__ import annotations
 
@@ -59,6 +66,9 @@ def main(argv=None):
     ap.add_argument("--k", type=int, default=256)
     ap.add_argument("--n", type=int, default=256)
     ap.add_argument("--avg", type=float, default=4.0)
+    ap.add_argument("--shards", type=int, default=1,
+                    help="row-block shards per request (partition-aware "
+                         "engine; 1 = unsharded)")
     ap.add_argument("--check", action="store_true",
                     help="verify every result against the dense oracle")
     args = ap.parse_args(argv)
@@ -70,7 +80,8 @@ def main(argv=None):
         ap.error("--warmup must be in [1, effective --requests)")
 
     stream = build_stream(args.requests, args.m, args.k, args.n, args.avg)
-    engine = SpgemmEngine(SpgemmConfig(method=args.method))
+    engine = SpgemmEngine(SpgemmConfig(method=args.method),
+                          shards=args.shards)
 
     # ---- phase 1: per-call wall-clock over the stream ---------------------
     times = []
@@ -111,6 +122,23 @@ def main(argv=None):
     print(f"hot traces:    {total_traces():9d}  "
           f"({retraces} after {args.warmup}-request warmup, target 0)")
 
+    # ---- sharded parity: merged C must match the unsharded path ----------
+    parity = True
+    if args.shards > 1:
+        A0, B0 = stream[0]
+        base = SpgemmEngine(SpgemmConfig(method=args.method)).execute(A0, B0)
+        res0 = engine.execute(A0, B0)
+        nnz = base.total_nnz
+        parity = (
+            res0.total_nnz == nnz
+            and np.array_equal(np.asarray(res0.C.rpt), np.asarray(base.C.rpt))
+            and np.array_equal(np.asarray(res0.C.col)[:nnz],
+                               np.asarray(base.C.col)[:nnz])
+            and np.allclose(np.asarray(res0.C.val)[:nnz],
+                            np.asarray(base.C.val)[:nnz]))
+        print(f"shard parity:  {'OK' if parity else 'MISMATCH':>9s}  "
+              f"({args.shards} shards vs unsharded: nnz/rpt/col/val)")
+
     # ---- phase 2: batched submit/drain (double-buffered overlap) ----------
     uids = [engine.submit(A, B) for A, B in stream]
     t0 = time.perf_counter()
@@ -119,15 +147,18 @@ def main(argv=None):
     drain_s = time.perf_counter() - t0
     print(f"drain:         {drain_s * 1e3:9.1f} ms for {len(uids)} requests "
           f"({drain_s / len(uids) * 1e3:.2f} ms/req, "
-          f"{engine.stats.overlapped} overlapped)")
+          f"{engine.stats.overlapped} overlapped, "
+          f"{engine.stats.reordered} reordered)")
     print()
     print(engine.report())
 
-    ok = speedup >= 5.0 and hit_rate >= 0.90 and retraces == 0
+    ok = (speedup >= 5.0 and hit_rate >= 0.90 and retraces == 0
+          and parity)
     print()
     print("PASS" if ok else "FAIL",
           f"(speedup {speedup:.1f}x, hit rate {hit_rate * 100:.1f}%, "
-          f"{retraces} steady-state retraces)")
+          f"{retraces} steady-state retraces"
+          + ("" if parity else ", shard parity MISMATCH") + ")")
     return 0 if ok else 1
 
 

@@ -66,7 +66,9 @@ print("multi-source BFS done —", int(visited.any(axis=1).sum()),
 
 # ---- chained A·A iteration (Markov-clustering expansion step) ------------
 # Each squaring reuses the SAME adjacency signature on the left, and the
-# batched submit/drain path pipelines the stream through the plan cache.
+# batched submit/drain path pipelines the stream through the plan cache
+# (drain finalizes in completion order — mixed-size hops don't
+# head-of-line block).
 P = adj
 for it in range(2):
     uid = engine.submit(adj, P)
@@ -75,3 +77,20 @@ for it in range(2):
 
 print()
 print(engine.report())
+
+# ---- partition-aware engine: row-block sharded BFS hop -------------------
+# shards=2 splits the adjacency into two flop-balanced row blocks; each
+# shard runs an ordinary (cached) SpGEMM and the merged frontier product
+# has identical structure.  Powerlaw adjacencies are exactly where the
+# flop split beats an even row split: the heavy-head rows stay together
+# in one slim shard.  On a multi-device mesh, pass ``mesh=`` to place
+# shard s on the s-th data-axis device (replicated frontier).
+sharded = SpgemmEngine(SpgemmConfig(method="esc"), shards=2)
+cold = sharded.execute(adj, frontier)
+hot = sharded.execute(adj, frontier)       # per-shard plans from the cache
+assert hot.total_nnz == cold.total_nnz
+spec = next(e.plan.shard_spec for _, e in sharded.cache.items()
+            if e.plan.shard_spec is not None)
+print(f"\nsharded hop: nnz={hot.total_nnz}, row blocks "
+      f"{'/'.join(str(b) for b in spec.bounds)} "
+      f"({len(sharded.cache)} plans cached)")

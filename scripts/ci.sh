@@ -15,3 +15,7 @@ python benchmarks/bench_engine.py --smoke
 echo
 echo "== engine smoke benchmark (hash method: zero-retrace steady state) =="
 python benchmarks/bench_engine.py --smoke --method hash
+
+echo
+echo "== engine smoke benchmark (sharded: partition parity + plan reuse) =="
+python benchmarks/bench_engine.py --smoke --shards 2

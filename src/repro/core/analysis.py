@@ -8,6 +8,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .csr import CSR
 
@@ -37,6 +38,22 @@ def nprod_into_rpt(A: CSR, B: CSR) -> jax.Array:
 @jax.jit
 def total_nprod(A: CSR, B: CSR) -> jax.Array:
     return jnp.sum(nprod_per_entry(A, B))
+
+
+def row_flops(A: CSR, B: CSR):
+    """(M,) int64 HOST array: flop estimate per output row — 2 * n_prod
+    (one multiply and one add per intermediate product).
+
+    This is the load-balance weight for row-block partitioning (the
+    SpGEMM-survey's key scaling lever): splitting A by *cumulative* row
+    flops, rather than by row count, keeps skewed matrices' shards even.
+    The doubling happens host-side in int64: on device (x64 disabled)
+    ``2 * nprod`` wraps int32, and a wrapped weight silently degenerates
+    the partition instead of erroring.  Callers are host-side anyway —
+    this read IS the partitioner's one cold-call sync.
+    """
+    nprod = jax.device_get(nprod_into_rpt(A, B)[:A.nrows])
+    return 2 * np.asarray(nprod, dtype=np.int64)
 
 
 def compression_ratio(A: CSR, B: CSR, C: CSR) -> float:

@@ -120,6 +120,26 @@ class CSR:
         flat = flat.at[lin].add(jnp.where(mask, self.val, 0))
         return flat[: m * n].reshape(m, n)
 
+    def row_slice(self, start: int, stop: int, *,
+                  nrows: int | None = None,
+                  capacity: int | None = None) -> "CSR":
+        """Rows ``[start, stop)`` as a new CSR with rebased row pointers.
+
+        The backbone of row-block sharding (Liu & Vinter's independent
+        row-block sub-products): each shard of A is a ``row_slice`` whose
+        product with the full B is an ordinary SpGEMM.  ``nrows`` /
+        ``capacity`` pad the slice to static buckets (trailing empty rows,
+        zero-filled storage) so every same-bucket slice presents identical
+        static shapes to the engine.  ``start``/``stop``/``nrows``/
+        ``capacity`` are static; the entry offsets stay on device, so
+        slicing never forces a host sync.
+
+        NB: ``capacity`` below the slice's true nnz silently truncates —
+        callers that bucket capacities must verify (the engine checks the
+        slice nnz against its learned shard buckets at dispatch).
+        """
+        return _row_slice(self, start, stop, nrows=nrows, capacity=capacity)
+
     def with_capacity(self, cap: int) -> "CSR":
         """Pad / truncate storage to a new static capacity."""
         cur = self.capacity
@@ -135,6 +155,30 @@ class CSR:
     def block_until_ready(self) -> "CSR":
         jax.block_until_ready((self.rpt, self.col, self.val))
         return self
+
+
+@partial(jax.jit, static_argnames=("start", "stop", "nrows", "capacity"))
+def _row_slice(A: "CSR", start: int, stop: int, *,
+               nrows: int | None = None,
+               capacity: int | None = None) -> "CSR":
+    n_real = stop - start
+    out_rows = nrows if nrows is not None else n_real
+    assert 0 <= start <= stop <= A.nrows, (start, stop, A.nrows)
+    assert out_rows >= n_real, (out_rows, n_real)
+    cap = int(capacity) if capacity is not None else A.capacity
+    assert cap >= 1
+    rpt_w = A.rpt[start:stop + 1]           # static slice: (n_real+1,)
+    base = rpt_w[0]
+    rpt = rpt_w - base
+    if out_rows > n_real:                   # padded rows are empty
+        rpt = jnp.concatenate(
+            [rpt, jnp.full(out_rows - n_real, rpt[-1], dtype=rpt.dtype)])
+    idx = base + jnp.arange(cap, dtype=jnp.int32)
+    valid = idx < rpt_w[-1]
+    safe = jnp.clip(idx, 0, A.capacity - 1)
+    col = jnp.where(valid, A.col[safe], 0)
+    val = jnp.where(valid, A.val[safe], 0)
+    return CSR(rpt=rpt, col=col, val=val, shape=(out_rows, A.ncols))
 
 
 @partial(jax.jit, static_argnames=("nnz_capacity",))

@@ -42,6 +42,7 @@ class SpgemmConfig:
     fuse_esc: bool = False           # beyond-paper single-expansion ESC
     interpret: bool = True           # Pallas interpret mode (CPU container)
     timing: bool = False             # per-step wall-clock (benchmarks)
+    shards: int = 1                  # row-block shards of A (engine fan-out)
 
     def ladders(self) -> tuple[BinLadder, BinLadder]:
         return (symbolic_ladder(self.sym_multiplier, vmem_extended=self.vmem_extended),
@@ -62,14 +63,21 @@ class SpgemmResult:
         return self.total_nprod / max(self.total_nnz, 1)
 
 
-def spgemm(A: CSR, B: CSR, config: SpgemmConfig = SpgemmConfig()) -> SpgemmResult:
+def spgemm(A: CSR, B: CSR, config: SpgemmConfig = SpgemmConfig(), *,
+           shards: Optional[int] = None) -> SpgemmResult:
     """C = A · B in CSR, two-phase, binned, statically bucketed.
 
     Executed through the shared :class:`repro.engine.SpgemmEngine`: the
     call is planned against the operands' shape-bucket signatures, and
     repeat signatures skip straight to a cached jitted executable.
+
+    ``shards=N`` partitions A into N flop-balanced row blocks and fans
+    the product out into per-shard sub-dispatches (one plan, N shards);
+    results are merged back into one CSR with identical nnz/structure.
     """
     assert A.ncols == B.nrows, (A.shape, B.shape)
+    if shards is not None:
+        config = dataclasses.replace(config, shards=int(shards))
     # Imported lazily: core is the engine's substrate, so the dependency
     # points engine -> core at module-load time and core -> engine only here.
     from repro.engine.executor import default_engine

@@ -5,11 +5,14 @@ API and the serving/analytics front-ends:
 
   plan.py      — immutable :class:`SpgemmPlan` over operand signatures
                  (everything derivable before data arrives).
+  partition.py — :class:`ShardSpec` row-block partitioning (flop-balanced
+                 bounds, pow-2 shard buckets) + mesh placement helpers.
   cache.py     — LRU :class:`PlanCache` of plans + jitted executables
-                 (hit/miss/evict counters; the §5.4 recompile analog).
+                 (hit/miss/evict counters; the §5.4 recompile analog),
+                 with JSON ``dump``/``load`` cross-process persistence.
   executor.py  — :class:`SpgemmEngine`: streaming submit/drain with
-                 plan-grouped batching and double-buffered host/device
-                 overlap; ``execute`` backs ``spgemm()``.
+                 plan-grouped batching, completion-order finalize, and
+                 sharded fan-out; ``execute`` backs ``spgemm()``.
   stats.py     — trace accounting and per-plan telemetry.
 
 Lifecycle::
@@ -18,17 +21,22 @@ Lifecycle::
               -> specialized plan + jitted executable cached
               -> steady-state requests: pad to bucket, dispatch async,
                  one verify sync; overflow grows buckets and re-plans.
+    shards=N  -> parent plan learns a flop-balanced ShardSpec; requests
+                 fan out into per-shard sub-dispatches (ordinary plans on
+                 the slice signatures) and a jitted merge concatenation.
 """
 from .cache import CacheEntry, PlanCache
 from .executor import (SpgemmEngine, SpgemmRequest, StepTimer,
                        default_engine, reset_default_engine)
+from .partition import ShardSpec, balanced_bounds, plan_shards, shard_devices
 from .plan import (HashSchedule, MatrixSig, PlanKey, SpgemmPlan, plan,
                    plan_key)
 from .stats import EngineStats, PlanStats, render, total_traces, traces_for
 
 __all__ = [
     "CacheEntry", "PlanCache", "SpgemmEngine", "SpgemmRequest", "StepTimer",
-    "default_engine", "reset_default_engine", "HashSchedule", "MatrixSig",
+    "default_engine", "reset_default_engine", "ShardSpec", "balanced_bounds",
+    "plan_shards", "shard_devices", "HashSchedule", "MatrixSig",
     "PlanKey", "SpgemmPlan", "plan", "plan_key", "EngineStats", "PlanStats",
     "render", "total_traces", "traces_for",
 ]

@@ -13,12 +13,19 @@ releases the underlying compiled program once JAX's own caches let go.
 from __future__ import annotations
 
 import dataclasses
+import json
 import threading
 from collections import OrderedDict
 from typing import Callable, Iterable, Optional, Tuple
 
-from .plan import PlanKey, SpgemmPlan
+from repro.core.spgemm import SpgemmConfig
+
+from .partition import ShardSpec
+from .plan import HashSchedule, MatrixSig, PlanKey, SpgemmPlan
+from .plan import plan as make_plan
 from .stats import PlanStats
+
+_DUMP_VERSION = 1
 
 
 @dataclasses.dataclass
@@ -56,13 +63,17 @@ class PlanCache:
 
     def insert(self, plan: SpgemmPlan) -> CacheEntry:
         """Insert a fresh plan (evicting LRU entries over capacity)."""
-        entry = CacheEntry(plan=plan)
         with self._lock:
-            self._entries[plan.signature] = entry
-            self._entries.move_to_end(plan.signature)
-            while len(self._entries) > self.capacity:
-                self._entries.popitem(last=False)
-                self.evictions += 1
+            return self._insert_locked(plan)
+
+    def _insert_locked(self, plan: SpgemmPlan) -> CacheEntry:
+        """Insert-and-evict body; caller holds ``self._lock``."""
+        entry = CacheEntry(plan=plan)
+        self._entries[plan.signature] = entry
+        self._entries.move_to_end(plan.signature)
+        while len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+            self.evictions += 1
         return entry
 
     def specialize(self, entry: CacheEntry, plan: SpgemmPlan) -> None:
@@ -71,6 +82,70 @@ class PlanCache:
         with self._lock:
             entry.plan = plan
             entry.executable = None
+
+    # -- persistence --------------------------------------------------------
+    def dump(self, path: str) -> int:
+        """Serialize every cached plan's learned state to JSON.
+
+        What persists is exactly what a fresh process cannot rederive
+        without traffic: the capacity buckets, hash launch schedules, and
+        shard specs (progressive-allocation state).  Executables are NOT
+        persisted — they rebuild on first use, so a loaded cache costs one
+        trace per plan instead of a cold steps call plus regrows.
+        Returns the number of entries written.
+        """
+        plans = [entry.plan for _, entry in self.items()]
+        payload = {
+            "version": _DUMP_VERSION,
+            "plans": [_plan_to_json(p) for p in plans],
+        }
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=1)
+        return len(plans)
+
+    def load(self, path: str) -> int:
+        """Prewarm the cache from a :meth:`dump` file (cross-process
+        plan-cache).  Loaded plans merge monotonically into any existing
+        same-signature entries (buckets/schedules/specs only grow).
+        Returns the number of plans loaded."""
+        with open(path) as f:
+            payload = json.load(f)
+        if payload.get("version") != _DUMP_VERSION:
+            raise ValueError(
+                f"plan-cache dump version {payload.get('version')!r} != "
+                f"{_DUMP_VERSION}")
+        plans = [_plan_from_json(blob) for blob in payload["plans"]]
+        # One critical section for the whole merge: a concurrent
+        # overflow-grow must not interleave between our read of an
+        # entry's plan and the write-back (lost update would shrink it).
+        with self._lock:
+            for plan in plans:
+                existing = self._entries.get(plan.signature)
+                if existing is None:
+                    self._insert_locked(plan)
+                    continue
+                merged = existing.plan
+                if plan.prod_bucket is not None:
+                    merged = merged.with_capacities(
+                        max(merged.prod_bucket or 0, plan.prod_bucket),
+                        max(merged.nnz_bucket or 0, plan.nnz_bucket))
+                if plan.hash_schedule is not None:
+                    sched = plan.hash_schedule
+                    if merged.hash_schedule is not None:
+                        sched = sched.union(merged.hash_schedule)
+                    merged = merged.with_hash_schedule(sched)
+                if plan.shard_spec is not None:
+                    spec = (merged.shard_spec.union(plan.shard_spec)
+                            if merged.shard_spec is not None
+                            else plan.shard_spec)
+                    merged = merged.with_shard_spec(spec)
+                # A no-op merge must NOT drop the live executable: a warm
+                # engine loading an equal-or-smaller dump keeps its
+                # zero-retrace steady state.
+                if merged != existing.plan:
+                    existing.plan = merged
+                    existing.executable = None
+        return len(plans)
 
     # -- introspection ------------------------------------------------------
     @property
@@ -91,3 +166,41 @@ class PlanCache:
     def clear(self) -> None:
         with self._lock:
             self._entries.clear()
+
+
+# -- JSON (de)serialization helpers -----------------------------------------
+
+def _plan_to_json(p: SpgemmPlan) -> dict:
+    blob = {
+        "a_sig": dataclasses.asdict(p.a_sig),
+        "b_sig": dataclasses.asdict(p.b_sig),
+        "config": dataclasses.asdict(p.config),
+        "prod_bucket": p.prod_bucket,
+        "nnz_bucket": p.nnz_bucket,
+        "hash_schedule": (dataclasses.asdict(p.hash_schedule)
+                          if p.hash_schedule is not None else None),
+        "shard_spec": (dataclasses.asdict(p.shard_spec)
+                       if p.shard_spec is not None else None),
+    }
+    return blob
+
+
+def _plan_from_json(blob: dict) -> SpgemmPlan:
+    plan = make_plan(MatrixSig(**blob["a_sig"]), MatrixSig(**blob["b_sig"]),
+                     SpgemmConfig(**blob["config"]))
+    if blob.get("prod_bucket") is not None:
+        plan = plan.with_capacities(blob["prod_bucket"], blob["nnz_bucket"])
+    hs = blob.get("hash_schedule")
+    if hs is not None:
+        plan = plan.with_hash_schedule(HashSchedule(
+            sym_row_buckets=tuple(hs["sym_row_buckets"]),
+            num_row_buckets=tuple(hs["num_row_buckets"]),
+            sym_fall_prod_bucket=hs["sym_fall_prod_bucket"],
+            num_fall_prod_bucket=hs["num_fall_prod_bucket"]))
+    ss = blob.get("shard_spec")
+    if ss is not None:
+        plan = plan.with_shard_spec(ShardSpec(
+            bounds=tuple(ss["bounds"]),
+            row_buckets=tuple(ss["row_buckets"]),
+            cap_buckets=tuple(ss["cap_buckets"])))
+    return plan

@@ -23,9 +23,15 @@ This module owns BOTH execution paths for the OpSparse two-phase flow
 The :class:`SpgemmEngine` streams requests through a plan cache
 (``cache.py``): requests are grouped by plan signature, operands are padded
 to the signature's pow-2 storage buckets (so every group member reuses one
-executable), and the drain loop is double-buffered — request ``k+1`` is
-planned and dispatched on the host while request ``k`` still executes on
-device, and only then is ``k`` finalized (its one host sync).
+executable), and the drain loop keeps a bounded window of dispatches in
+flight — request ``k+1`` is planned and dispatched on the host while
+earlier requests still execute on device — finalizing pending records in
+COMPLETION order (whichever device work finishes first gets its one host
+sync first; ``drain_ordered=True`` restores dispatch-order finalize).
+
+``shards=N`` fans each request out into flop-balanced row-block
+sub-dispatches of A (``partition.py``) that reuse the same plan machinery,
+merged back by a per-plan jitted concatenation.
 """
 from __future__ import annotations
 
@@ -40,7 +46,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import esc
-from repro.core.analysis import exclusive_sum_in_place, nprod_into_rpt
+from repro.core.analysis import (exclusive_sum_in_place, nprod_into_rpt,
+                                 row_flops)
 from repro.core.binning import bin_rows, bin_rows_for_ladder
 from repro.core.csr import CSR
 from repro.core.spgemm import SpgemmConfig, SpgemmResult, next_bucket
@@ -48,6 +55,7 @@ from repro.kernels import spgemm_hash
 
 from . import stats as stats_mod
 from .cache import CacheEntry, PlanCache
+from .partition import ShardSpec, plan_shards, shard_devices
 from .plan import HashSchedule, MatrixSig, SpgemmPlan, plan as make_plan
 from .stats import EngineStats
 
@@ -58,6 +66,14 @@ _exclusive_sum = jax.jit(exclusive_sum_in_place, donate_argnums=0)
 # masked grid steps, far cheaper than the steps-redo + recompile an
 # overflow costs (the §5.1/§5.6 memory-vs-retrace trade-off).
 _SCHEDULE_HEADROOM = 2.0
+
+# Capacity buckets (product expansion / C storage) get a smaller margin:
+# it only moves the learned pow-2 bucket when the observed total sits in
+# the top fifth of one, exactly where same-signature jitter would
+# otherwise flip buckets call over call (sharded sub-problems halve the
+# totals, putting them near boundaries far more often than whole
+# matrices).  Elsewhere it is absorbed by the pow-2 rounding for free.
+_CAPACITY_HEADROOM = 1.25
 
 
 class StepTimer:
@@ -119,7 +135,8 @@ def _execute_steps(A: CSR, B: CSR, plan: SpgemmPlan,
     timer.measure("symbolic_binning", sym_binning.bins)
 
     prod_capacity = max(plan.prod_bucket or 0,
-                        next_bucket(max(total_nprod, 1)))
+                        next_bucket(max(int(total_nprod
+                                            * _CAPACITY_HEADROOM), 1)))
 
     # ---- step3: symbolic ----------------------------------------------------
     sym_buckets = sym_fall = None
@@ -144,7 +161,9 @@ def _execute_steps(A: CSR, B: CSR, plan: SpgemmPlan,
     # launch-early / allocate-later ordering of §5.4.
     num_binning = bin_rows_for_ladder(nnz, num_ladder)
     total_nnz = int(jnp.sum(nnz))                # host sync #2 (alloc C)
-    nnz_capacity = max(plan.nnz_bucket or 0, next_bucket(max(total_nnz, 1)))
+    nnz_capacity = max(plan.nnz_bucket or 0,
+                       next_bucket(max(int(total_nnz
+                                           * _CAPACITY_HEADROOM), 1)))
     rpt = _exclusive_sum(nnz_buf)                # in-place on the rpt buffer
     timer.measure("alloc", rpt)
     timer.measure("numeric_binning", num_binning.bins)
@@ -277,6 +296,44 @@ def _build_hash_executable(plan: SpgemmPlan) -> Callable:
     return run
 
 
+def _build_merge_executable(spec: ShardSpec, m: int, n: int) -> Callable:
+    """Jit the per-shard CSR concatenation for a sharded plan's partition.
+
+    Row-block sub-products are disjoint in row space, so the merged C is a
+    pure concatenation: shard row pointers rebased by the running nnz
+    offsets (on device — no host math touches the arrays) and each shard's
+    packed entries scattered at its offset.  Shapes are static (the real
+    row counts come from the spec's pinned bounds; storage from the shard
+    results' capacities), so one trace serves the steady state; a shard
+    plan's nnz-bucket growth changes an input shape and retraces once.
+    """
+    real_rows = tuple(spec.rows(s) for s in range(spec.n_shards))
+    key = ("merge", spec.bounds, m, n)
+
+    @jax.jit
+    def run(parts):
+        stats_mod.record_trace(key)      # fires once per trace (recompile)
+        nnzs = jnp.stack([C.rpt[r] for C, r in zip(parts, real_rows)])
+        offs = jnp.concatenate(
+            [jnp.zeros(1, jnp.int32),
+             jnp.cumsum(nnzs).astype(jnp.int32)])
+        rpt = jnp.concatenate(
+            [C.rpt[:r] + offs[i]
+             for i, (C, r) in enumerate(zip(parts, real_rows))]
+            + [offs[-1:]])
+        out_cap = sum(C.capacity for C in parts)
+        col = jnp.zeros(out_cap, jnp.int32)
+        val = jnp.zeros(out_cap, parts[0].val.dtype)
+        for i, C in enumerate(parts):
+            idx = jnp.arange(C.capacity, dtype=jnp.int32)
+            tgt = jnp.where(idx < nnzs[i], offs[i] + idx, out_cap)  # drop pad
+            col = col.at[tgt].set(C.col, mode="drop")
+            val = val.at[tgt].set(C.val, mode="drop")
+        return CSR(rpt=rpt, col=col, val=val, shape=(m, n))
+
+    return run
+
+
 # ---------------------------------------------------------------------------
 # Request records.
 # ---------------------------------------------------------------------------
@@ -313,7 +370,39 @@ class _Pending:
     t0: float
 
 
-_Record = Union[_Finished, _Pending]
+@dataclasses.dataclass
+class _ShardedPending:
+    """A request fanned out into per-shard sub-dispatches awaiting merge.
+
+    Each element of ``shard_recs`` is an ordinary record (_Finished from a
+    cold shard, _Pending from a hot one) with its own verify sync; the
+    merge finalizer verifies the slice storage buckets (redoing any
+    truncated shard), then concatenates the per-shard CSRs."""
+
+    uid: int
+    entry: CacheEntry   # the PARENT (sharded) plan's cache entry
+    spec: ShardSpec     # the partition the shards were sliced with
+    shard_recs: List["_Record"]
+    A: CSR              # the canonicalized operands, kept for slice
+    B: CSR              # verification and overflowed-shard redo
+    config: SpgemmConfig
+    t0: float
+
+
+_Record = Union[_Finished, _Pending, _ShardedPending]
+
+
+def _record_ready(rec: _Record) -> bool:
+    """Whether a record's device work has completed (non-blocking probe).
+
+    Backends whose arrays lack ``is_ready`` report True — the completion-
+    order drain then degrades gracefully to dispatch order."""
+    if isinstance(rec, _Finished):
+        return True
+    if isinstance(rec, _ShardedPending):
+        return all(_record_ready(r) for r in rec.shard_recs)
+    return all(leaf.is_ready() for leaf in jax.tree_util.tree_leaves(rec.handles)
+               if hasattr(leaf, "is_ready"))
 
 
 class SpgemmEngine:
@@ -325,26 +414,57 @@ class SpgemmEngine:
         r = engine.execute(A, B)                 # synchronous, plan-cached
 
         engine.submit(A1, B1); engine.submit(A2, B2)
-        results = engine.drain()                 # batched, double-buffered
+        results = engine.drain()    # batched, completion-order finalize
 
     ``execute`` is what ``repro.core.spgemm`` wraps; ``submit``/``drain``
-    is the serving-path API (requests grouped by plan, request k+1 planned
-    while request k executes).
+    is the serving-path API: requests grouped by plan, a bounded window
+    of dispatches in flight, pending work finalized as it completes
+    (``drain(drain_ordered=True)`` restores dispatch-order finalize).
+
+    ``shards=N`` makes every plan partition-aware: requests fan out into N
+    flop-balanced row-block sub-dispatches of A (pow-2-bucketed slice
+    signatures, so shard plans hit the cache) whose CSR results a jitted
+    merge finalizer concatenates back — one plan, N shards.  ``mesh``
+    optionally places shard s on the s-th data-axis device of a
+    ``launch/mesh.py`` mesh (replicated B, row-sharded A).
     """
 
     def __init__(self, config: Optional[SpgemmConfig] = None, *,
-                 cache_capacity: int = 64):
+                 cache_capacity: int = 64, shards: int = 1, mesh=None):
+        assert shards >= 1
         self.config = config or SpgemmConfig()
+        self.shards = shards
+        self.mesh = mesh
         self.cache = PlanCache(cache_capacity)
         self.stats = EngineStats()
         self._queue: List[SpgemmRequest] = []
         self._uids = itertools.count()
+        # Per-device replicated-B memo for the mesh path.  Streams reuse
+        # the same B request after request (the repeated-adjacency
+        # pattern), so B ships to each non-home device ONCE, not once per
+        # dispatch.  A new B clears the WHOLE memo (identity check on the
+        # source array) so stale replicas don't pin device memory.
+        self._b_src = None
+        self._b_placed: Dict = {}
 
     # -- public API ---------------------------------------------------------
+    def _effective_config(self, config: Optional[SpgemmConfig]) -> SpgemmConfig:
+        """Resolve the per-call config.  The engine-level ``shards`` knob
+        only folds into the engine's own default config — an explicitly
+        passed config is taken verbatim, so ``SpgemmConfig(shards=1)``
+        opts a single call out of engine-level sharding."""
+        if config is not None:
+            return config
+        config = self.config
+        if self.shards > 1 and config.shards == 1:
+            config = dataclasses.replace(config, shards=self.shards)
+        return config
+
     def execute(self, A: CSR, B: CSR,
                 config: Optional[SpgemmConfig] = None) -> SpgemmResult:
         """Plan-then-execute one product (the ``spgemm()`` backend)."""
-        rec = self._dispatch(next(self._uids), A, B, config or self.config)
+        rec = self._dispatch(next(self._uids), A, B,
+                             self._effective_config(config))
         return self._finalize(rec)
 
     def prewarm(self, A: CSR, B: CSR,
@@ -358,8 +478,17 @@ class SpgemmEngine:
         front, e.g. a BFS whose frontiers grow hop over hop.  The first
         real request then goes straight to the jitted hot path instead
         of paying a cold discovery call plus progressive regrows.
+
+        Capacity buckets are per-(sub-)problem state, which a sharded
+        parent plan doesn't hold — its partition needs data the caller
+        can't supply here.  On a sharded engine, pass an explicit
+        unsharded config (or prewarm via :meth:`PlanCache.load`).
         """
-        config = config or self.config
+        config = self._effective_config(config)
+        if config.shards != 1:       # not assert: must survive python -O
+            raise ValueError(
+                "prewarm seeds capacity buckets, which sharded plans don't "
+                "use; pass SpgemmConfig(shards=1) or PlanCache.load() a dump")
         a_sig, b_sig = MatrixSig.of(A), MatrixSig.of(B)
         entry = self.cache.get((a_sig, b_sig, config))
         if entry is None:
@@ -376,15 +505,22 @@ class SpgemmEngine:
         """Queue a request; returns its uid (resolved by ``drain``)."""
         assert A.ncols == B.nrows, (A.shape, B.shape)
         uid = next(self._uids)
-        self._queue.append(SpgemmRequest(uid, A, B, config or self.config))
+        self._queue.append(
+            SpgemmRequest(uid, A, B, self._effective_config(config)))
         return uid
 
-    def drain(self) -> Dict[int, SpgemmResult]:
+    def drain(self, *, drain_ordered: bool = False,
+              window: int = 4) -> Dict[int, SpgemmResult]:
         """Run all queued requests; returns {uid: result}.
 
         Requests are grouped by plan signature (group members share one
-        executable) and pipelined: dispatch(k+1) happens before
-        finalize(k), so host planning overlaps device execution.
+        executable) and pipelined: up to ``window`` dispatches stay in
+        flight, and pending records are finalized in COMPLETION order —
+        whichever device work finishes first gets its verify sync first,
+        so a slow mixed-size request no longer head-of-line-blocks the
+        small ones dispatched after it.  ``drain_ordered=True`` restores
+        the PR-1 dispatch-order double-buffered finalize (compat flag; the
+        return type is identical either way).
         """
         queue, self._queue = self._queue, []
         self.stats.drains += 1
@@ -392,28 +528,63 @@ class SpgemmEngine:
         for req in queue:
             key = (MatrixSig.of(req.A), MatrixSig.of(req.B), req.config)
             groups.setdefault(key, []).append(req)
+        ordered = itertools.chain.from_iterable(groups.values())
 
         results: Dict[int, SpgemmResult] = {}
-        inflight: Optional[_Record] = None
-        for req in itertools.chain.from_iterable(groups.values()):
-            rec = self._dispatch(req.uid, req.A, req.B, req.config)
+        if drain_ordered:
+            inflight: Optional[_Record] = None
+            for req in ordered:
+                rec = self._dispatch(req.uid, req.A, req.B, req.config)
+                if inflight is not None:
+                    if not isinstance(inflight, _Finished):
+                        self.stats.overlapped += 1   # planned k+1 while k ran
+                    results[inflight.uid] = self._finalize(inflight)
+                inflight = rec
             if inflight is not None:
-                if isinstance(inflight, _Pending):
-                    self.stats.overlapped += 1   # planned k+1 while k ran
                 results[inflight.uid] = self._finalize(inflight)
-            inflight = rec
-        if inflight is not None:
-            results[inflight.uid] = self._finalize(inflight)
+            return results
+
+        pending: List[_Record] = []
+        for req in ordered:
+            rec = self._dispatch(req.uid, req.A, req.B, req.config)
+            if any(not isinstance(r, _Finished) for r in pending):
+                self.stats.overlapped += 1   # planned k+1 while k ran
+            pending.append(rec)
+            while len(pending) > window:
+                self._reap_one(pending, results)
+        while pending:
+            self._reap_one(pending, results)
         return results
+
+    def _reap_one(self, pending: List[_Record],
+                  results: Dict[int, SpgemmResult]) -> None:
+        """Finalize ONE pending record, preferring completed device work;
+        with nothing complete yet, fall back to the oldest dispatch."""
+        for i, rec in enumerate(pending):
+            if _record_ready(rec):
+                if i:
+                    self.stats.reordered += 1
+                pending.pop(i)
+                results[rec.uid] = self._finalize(rec)
+                return
+        rec = pending.pop(0)
+        results[rec.uid] = self._finalize(rec)
 
     def report(self) -> str:
         return stats_mod.render(self)
 
     # -- internals ----------------------------------------------------------
-    def _dispatch(self, uid: int, A: CSR, B: CSR,
-                  config: SpgemmConfig) -> _Record:
+    def _dispatch(self, uid: int, A: CSR, B: CSR, config: SpgemmConfig, *,
+                  _sub: bool = False) -> _Record:
         assert A.ncols == B.nrows, (A.shape, B.shape)
-        self.stats.requests += 1
+        if config.shards > 1:
+            if A.nrows >= 2:
+                return self._dispatch_sharded(uid, A, B, config)
+            # Nothing to partition: run (and key the plan) unsharded so
+            # the request still reaches the jitted steady state.
+            config = dataclasses.replace(config, shards=1)
+        if not _sub:       # shard sub-dispatches aren't user requests
+            self.stats.requests += 1
         t0 = time.perf_counter()
         a_sig, b_sig = MatrixSig.of(A), MatrixSig.of(B)
         entry = self.cache.get((a_sig, b_sig, config))
@@ -453,7 +624,71 @@ class SpgemmEngine:
         entry.stats.hot_calls += 1
         return _Pending(uid, entry, plan, A, B, handles, t0)
 
+    def _dispatch_sharded(self, uid: int, A: CSR, B: CSR,
+                          config: SpgemmConfig) -> _Record:
+        """Fan one request out into per-shard row-block sub-dispatches.
+
+        The parent plan owns the learned :class:`ShardSpec`; each shard's
+        A slice is padded to the spec's pow-2 row/storage buckets and
+        dispatched through the ordinary (unsharded) plan machinery, so
+        shards reuse the existing ESC/hash executables — and shards whose
+        buckets coincide share ONE sub-plan.  Per-shard slice overflow
+        grows only that shard's bucket (and hence only that shard's plan).
+        """
+        self.stats.requests += 1
+        self.stats.sharded_requests += 1
+        t0 = time.perf_counter()
+        a_sig, b_sig = MatrixSig.of(A), MatrixSig.of(B)
+        entry = self.cache.get((a_sig, b_sig, config))
+        if entry is None:
+            entry = self.cache.insert(make_plan(a_sig, b_sig, config))
+        entry.stats.calls += 1
+
+        spec = entry.plan.shard_spec
+        if spec is None:
+            # Cold call: ONE host read of the flop estimate balances the
+            # row blocks; the partition is then pinned so steady-state
+            # shard signatures never move.  Steady-state dispatch stays
+            # sync-free — whether this request's slices FIT the learned
+            # storage buckets is checked in the finalize sync (an
+            # overflowed slice would be silently truncated, which the
+            # sub-plans can't detect themselves).
+            flops = row_flops(A, B)            # host int64 (its one sync)
+            rpt = jax.device_get(A.rpt)
+            spec = plan_shards(rpt, flops, config.shards)
+            self.cache.specialize(entry, entry.plan.with_shard_spec(spec))
+
+        if entry.executable is None:
+            entry.executable = _build_merge_executable(
+                spec, m=A.nrows, n=B.ncols)
+
+        devices = (shard_devices(self.mesh, spec.n_shards)
+                   if self.mesh is not None else None)
+        sub_cfg = dataclasses.replace(config, shards=1)
+        shard_recs: List[_Record] = []
+        for s in range(spec.n_shards):
+            A_s = A.row_slice(spec.bounds[s], spec.bounds[s + 1],
+                              nrows=spec.row_buckets[s],
+                              capacity=spec.cap_buckets[s])
+            B_s = B
+            if devices is not None:
+                dev = devices[s]
+                A_s = jax.device_put(A_s, dev)          # row-sharded A
+                if self._b_src is not B.val:            # new B: drop replicas
+                    self._b_src = B.val
+                    self._b_placed = {}
+                if dev not in self._b_placed:
+                    self._b_placed[dev] = (B if dev in B.val.devices()
+                                           else jax.device_put(B, dev))
+                B_s = self._b_placed[dev]
+            shard_recs.append(
+                self._dispatch(uid, A_s, B_s, sub_cfg, _sub=True))
+        return _ShardedPending(uid, entry, spec, shard_recs, A, B,
+                               config, t0)
+
     def _finalize(self, rec: _Record) -> SpgemmResult:
+        if isinstance(rec, _ShardedPending):
+            return self._finalize_sharded(rec)
         if isinstance(rec, _Finished):
             return rec.result
 
@@ -489,6 +724,75 @@ class SpgemmEngine:
         return SpgemmResult(
             C=C, total_nprod=total_nprod, total_nnz=total_nnz,
             sym_binning=sym_binning, num_binning=num_binning, timings={})
+
+    def _finalize_sharded(self, rec: _ShardedPending) -> SpgemmResult:
+        """Merge finalizer: one verify sync per shard (each sub-record's
+        ordinary finalize, overflow redo and all), then the jitted
+        device-side concatenation of the per-shard CSRs.
+
+        The slice-storage check happens HERE, not at dispatch: a slice
+        whose nnz outgrew its learned bucket was silently truncated (the
+        sub-plan can't tell — the truncated slice is self-consistent), so
+        the boundary gather below is part of the request's verify sync.
+        Keeping it out of dispatch keeps sharded dispatch sync-free, so
+        drain()'s in-flight window genuinely overlaps sharded requests.
+        An overflow grows only the offending shard's bucket and redoes
+        only that shard."""
+        t_fin = time.perf_counter()
+        spec = rec.spec
+        slice_nnz = jax.device_get(
+            rec.A.rpt[jnp.asarray(spec.bounds, dtype=jnp.int32)])
+        sizes = [int(slice_nnz[s + 1]) - int(slice_nnz[s])
+                 for s in range(spec.n_shards)]
+        overflowed = [s for s in range(spec.n_shards)
+                      if sizes[s] > spec.cap_buckets[s]]
+        if overflowed:
+            grown = spec
+            for s in overflowed:
+                grown = grown.with_cap_bucket(s, 2 * sizes[s])  # headroom
+                self.stats.shard_grows += 1
+            rec.entry.stats.capacity_grows += len(overflowed)
+            current = rec.entry.plan.shard_spec
+            if current is not None:     # keep any concurrent growth
+                grown = grown.union(current)
+            self.cache.specialize(
+                rec.entry, rec.entry.plan.with_shard_spec(grown))
+            sub_cfg = dataclasses.replace(rec.config, shards=1)
+            for s in overflowed:        # redo ONLY the truncated shards
+                A_s = rec.A.row_slice(spec.bounds[s], spec.bounds[s + 1],
+                                      nrows=grown.row_buckets[s],
+                                      capacity=grown.cap_buckets[s])
+                rec.shard_recs[s] = self._dispatch(
+                    rec.uid, A_s, rec.B, sub_cfg, _sub=True)
+        shard_results = [self._finalize(r) for r in rec.shard_recs]
+        merge = rec.entry.executable
+        if merge is None:     # entry re-specialized while we were in flight
+            merge = _build_merge_executable(
+                rec.spec, m=rec.spec.bounds[-1], n=rec.B.ncols)
+            rec.entry.executable = merge
+        parts = tuple(r.C for r in shard_results)
+        if self.mesh is not None:
+            # Mesh placement commits each shard's result to its shard
+            # device; one jitted computation can't mix committed devices,
+            # so gather the parts home before concatenating.
+            home = next(iter(parts[0].val.devices()))
+            parts = tuple(C if C.val.devices() == {home}
+                          else jax.device_put(C, home) for C in parts)
+        C = merge(parts)
+        timings: Dict[str, float] = {}
+        for r in shard_results:
+            for k, v in r.timings.items():
+                timings[k] = timings.get(k, 0.0) + v
+        # Book only the merge/verify overhead on the parent plan — the
+        # shard work is already charged to the shard plans, and the
+        # overhead-vs-shard-work split is exactly what an adaptive shard
+        # count would tune on.
+        rec.entry.stats.time_s += time.perf_counter() - t_fin
+        return SpgemmResult(
+            C=C,
+            total_nprod=sum(r.total_nprod for r in shard_results),
+            total_nnz=sum(r.total_nnz for r in shard_results),
+            sym_binning=None, num_binning=None, timings=timings)
 
     def _grow_and_redo(self, rec: _Pending, total_nprod: int,
                        total_nnz: int) -> SpgemmResult:

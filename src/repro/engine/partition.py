@@ -1,0 +1,132 @@
+"""Row-block partitioning: one plan, N shards.
+
+Liu & Vinter's framework shows SpGEMM decomposes into independent
+row-block sub-products — C[lo:hi] = A[lo:hi] · B — and the SpGEMM survey
+identifies load-balanced row partitioning as the key scaling lever.  The
+engine's flop-estimate machinery (``core/analysis.row_flops``) already
+computes the balance weight per row, so a partition-aware plan carries a
+:class:`ShardSpec`: N contiguous row blocks of A whose *cumulative* flop
+estimates are even, with each block's row count and slice storage
+bucketed to pow-2 so the per-shard sub-problems land on stable plan
+signatures (and therefore hit the plan cache — two shards with the same
+buckets share ONE plan and ONE executable).
+
+The spec is learned on the cold call (the only host sync that reads the
+whole flop vector) and then pinned: steady-state traffic in the same
+shape bucket reuses the learned bounds, so shard signatures never move
+and the per-shard executables stay hot.  Per-shard overflow (a slice
+outgrowing its storage bucket) grows only that shard's bucket —
+monotonically, like every other learned capacity in the engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+from repro.core.workspace import next_bucket
+from repro.launch.mesh import data_axis_devices  # noqa: F401  (re-export)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardSpec:
+    """Learned row-block partition of A for one plan signature.
+
+    bounds       n_shards+1 row boundaries (bounds[0]=0, bounds[-1]=M);
+                 contiguous blocks balanced by cumulative flop estimate.
+    row_buckets  pow-2 padded row count per shard — the static nrows of
+                 the shard's A slice (padding rows are empty).
+    cap_buckets  pow-2 col/val storage capacity per shard slice.
+    """
+
+    bounds: Tuple[int, ...]
+    row_buckets: Tuple[int, ...]
+    cap_buckets: Tuple[int, ...]
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.row_buckets)
+
+    def rows(self, s: int) -> int:
+        """Real (unpadded) row count of shard ``s``."""
+        return self.bounds[s + 1] - self.bounds[s]
+
+    def with_cap_bucket(self, s: int, cap: int) -> "ShardSpec":
+        """Grown spec: shard ``s``'s storage bucket raised to ``cap``.
+
+        Only that shard's signature moves — the other shards' plans (and
+        their cached executables) are untouched."""
+        caps = list(self.cap_buckets)
+        caps[s] = max(caps[s], next_bucket(max(int(cap), 1)))
+        return dataclasses.replace(self, cap_buckets=tuple(caps))
+
+    def union(self, other: "ShardSpec") -> "ShardSpec":
+        """Elementwise-max storage buckets over an identical partition —
+        specs only ever grow (cross-process cache merges).  Specs with
+        different bounds aren't comparable; keep ``self``."""
+        if (other.bounds != self.bounds
+                or other.row_buckets != self.row_buckets):
+            return self
+        return dataclasses.replace(self, cap_buckets=tuple(
+            max(a, b) for a, b in zip(self.cap_buckets, other.cap_buckets)))
+
+
+def balanced_bounds(weights: np.ndarray, n_shards: int) -> Tuple[int, ...]:
+    """Contiguous row-block boundaries balancing cumulative ``weights``.
+
+    Greedy prefix cuts at each multiple of total/n: block s ends at the
+    first row whose cumulative weight reaches s·total/n, so no block
+    exceeds total/n + max(row weight) — within 2x of the mean whenever no
+    single row dominates.  Zero-total inputs fall back to an even row
+    split.  Every shard keeps at least one row while rows remain.
+    """
+    m = int(len(weights))
+    n = max(1, min(int(n_shards), m if m else 1))
+    if m == 0:
+        return (0,) * (n + 1)
+    cum = np.cumsum(np.asarray(weights, dtype=np.int64))
+    total = int(cum[-1])
+    bounds = [0]
+    for s in range(1, n):
+        if total > 0:
+            cut = int(np.searchsorted(cum, total * s / n, side="left")) + 1
+        else:
+            cut = (m * s) // n
+        # Monotone, and leave >=1 row for each remaining shard.
+        cut = max(bounds[-1] + 1, min(cut, m - (n - s)))
+        bounds.append(cut)
+    bounds.append(m)
+    return tuple(bounds)
+
+
+# Slice-storage buckets carry headroom over the cold call's observed nnz:
+# same-signature traffic jitters within its pow-2 storage bucket, and a
+# padded slice is orders of magnitude cheaper than the bucket grow (plan
+# re-specialization + retrace) an overflow costs — the same memory-vs-
+# retrace trade-off as the hash schedule's 2x.
+_SLICE_HEADROOM = 2.0
+
+
+def plan_shards(rpt: np.ndarray, flops: np.ndarray, n_shards: int, *,
+                headroom: float = _SLICE_HEADROOM) -> ShardSpec:
+    """Derive a :class:`ShardSpec` from host-fetched row pointers and the
+    per-row flop estimate (``core/analysis.row_flops``)."""
+    rpt = np.asarray(rpt, dtype=np.int64)
+    bounds = balanced_bounds(flops, n_shards)
+    row_buckets = tuple(
+        next_bucket(max(bounds[s + 1] - bounds[s], 1), minimum=1)
+        for s in range(len(bounds) - 1))
+    cap_buckets = tuple(
+        next_bucket(max(int((rpt[bounds[s + 1]] - rpt[bounds[s]])
+                            * headroom), 1))
+        for s in range(len(bounds) - 1))
+    return ShardSpec(bounds=bounds, row_buckets=row_buckets,
+                     cap_buckets=cap_buckets)
+
+
+def shard_devices(mesh, n_shards: int) -> tuple:
+    """Round-robin shard -> device placement over the mesh's data axes
+    (replicated B, row-sharded A)."""
+    devs = data_axis_devices(mesh)
+    return tuple(devs[s % len(devs)] for s in range(n_shards))

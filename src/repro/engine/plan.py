@@ -26,6 +26,8 @@ from repro.core.csr import CSR
 from repro.core.spgemm import SpgemmConfig, next_bucket
 from repro.core.workspace import WorkspacePlan
 
+from .partition import ShardSpec
+
 
 @dataclasses.dataclass(frozen=True)
 class MatrixSig:
@@ -49,6 +51,12 @@ class MatrixSig:
                    dtype=str(M.val.dtype))
 
 
+# The cache key.  Partition-awareness threads through it via
+# ``SpgemmConfig.shards``: a sharded parent plan (shards=N) and the
+# unsharded plan of the same operands are distinct cache entries, and each
+# per-shard sub-dispatch keys on its SLICE's signature (pow-2 row/storage
+# buckets from the plan's ShardSpec) with shards=1 — so shard plans are
+# ordinary plans, shared across shards/requests whose buckets coincide.
 PlanKey = Tuple[MatrixSig, MatrixSig, SpgemmConfig]
 
 
@@ -120,6 +128,9 @@ class SpgemmPlan:
                        learned).
       hash_schedule    static per-rung launch schedule (hash method only;
                        ``None`` until learned — ESC plans never set it).
+      shard_spec       learned row-block partition (sharded plans only,
+                       ``config.shards > 1``; ``None`` until the cold call
+                       balances the blocks by cumulative flop estimate).
     """
 
     a_sig: MatrixSig
@@ -132,6 +143,7 @@ class SpgemmPlan:
     prod_bucket: Optional[int] = None
     nnz_bucket: Optional[int] = None
     hash_schedule: Optional[HashSchedule] = None
+    shard_spec: Optional[ShardSpec] = None
 
     @property
     def signature(self) -> PlanKey:
@@ -141,7 +153,11 @@ class SpgemmPlan:
     @property
     def is_specialized(self) -> bool:
         """True once everything the jitted steady state needs is learned —
-        the capacity buckets, plus the launch schedule for hash plans."""
+        the capacity buckets, plus the launch schedule for hash plans.
+        A sharded parent plan only needs its partition: the capacities
+        live on the per-shard sub-plans."""
+        if self.config.shards > 1:
+            return self.shard_spec is not None
         caps = self.prod_bucket is not None and self.nnz_bucket is not None
         if self.config.method == "hash":
             return caps and self.hash_schedule is not None
@@ -156,6 +172,10 @@ class SpgemmPlan:
     def with_hash_schedule(self, schedule: HashSchedule) -> "SpgemmPlan":
         """Plan with a learned (or grown) static hash launch schedule."""
         return dataclasses.replace(self, hash_schedule=schedule)
+
+    def with_shard_spec(self, spec: ShardSpec) -> "SpgemmPlan":
+        """Plan with a learned (or per-shard-grown) row-block partition."""
+        return dataclasses.replace(self, shard_spec=spec)
 
     def admits(self, A: CSR, B: CSR) -> bool:
         """Whether (A, B) land in this plan's shape buckets."""

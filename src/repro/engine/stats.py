@@ -63,6 +63,9 @@ class EngineStats:
     capacity_grows: int = 0
     bin_overflows: int = 0    # hash launch-schedule overflows (subset of grows)
     drains: int = 0
+    sharded_requests: int = 0 # requests fanned out into row-block shards
+    shard_grows: int = 0      # per-shard slice-storage bucket grows
+    reordered: int = 0        # drain() finalizes ahead of dispatch order
 
 
 def render(engine) -> str:
@@ -79,6 +82,9 @@ def render(engine) -> str:
         "recompiles: %d hot-path traces, %d capacity grows "
         "(%d hash bin overflows)" % (
             total_traces(), s.capacity_grows, s.bin_overflows),
+        "sharding: %d sharded requests, %d per-shard bucket grows; "
+        "drain reordered %d finalizes" % (
+            s.sharded_requests, s.shard_grows, s.reordered),
     ]
     for key, entry in cache.items():
         ps = entry.stats
@@ -89,6 +95,11 @@ def render(engine) -> str:
             sched = ", sched sym=%s num=%s" % (
                 "/".join(str(b) for b in hs.sym_row_buckets),
                 "/".join(str(b) for b in hs.num_row_buckets))
+        if p.shard_spec is not None:
+            sched += ", shards=%d bounds=%s caps=%s" % (
+                p.shard_spec.n_shards,
+                "/".join(str(b) for b in p.shard_spec.bounds),
+                "/".join(str(c) for c in p.shard_spec.cap_buckets))
         lines.append(
             "  plan %dx%d·%dx%d %s: %d calls (%d hot / %d steps), "
             "buckets prod=%s nnz=%s%s, %.1f ms total" % (

@@ -432,8 +432,14 @@ def host_schedule(A: CSR, B: CSR, binning: Binning, ladder: BinLadder, *,
     """
     sizes = np.asarray(binning.bin_size)       # host sync: launch schedule
     m_cap = next_bucket(binning.bins.shape[0], minimum=_ROW_BUCKET_MIN)
+    # With headroom the bucket must strictly EXCEED the headroom target:
+    # an observed count already on a pow-2 would otherwise learn a bucket
+    # with zero margin, and any jitter overflows it (the boundary-straddle
+    # failure the headroom exists to prevent).  headroom=1.0 (the faithful
+    # per-call path) keeps exact buckets.
+    strict = 1 if headroom > 1.0 else 0
     row_buckets = tuple(
-        min(m_cap, next_bucket(int(np.ceil(int(s) * headroom)),
+        min(m_cap, next_bucket(int(np.ceil(int(s) * headroom)) + strict,
                                minimum=_ROW_BUCKET_MIN)) if s else 0
         for s in sizes)
     fallback_prod_capacity = 0
@@ -443,7 +449,7 @@ def host_schedule(A: CSR, B: CSR, binning: Binning, ladder: BinLadder, *,
         sub_prod = int(jnp.sum(                # host sync: fallback alloc
             jnp.where(valid, nprod_of_rows(A, B, rows), 0)))
         fallback_prod_capacity = next_bucket(
-            int(np.ceil(max(sub_prod, 1) * headroom)),
+            int(np.ceil(max(sub_prod, 1) * headroom)) + strict,
             minimum=_ROW_BUCKET_MIN)
     return row_buckets, fallback_prod_capacity
 

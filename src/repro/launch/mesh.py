@@ -8,6 +8,7 @@ single real CPU device.
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -19,6 +20,22 @@ def make_production_mesh(*, multi_pod: bool = False):
 def data_axes(mesh) -> tuple:
     """The data-parallel axes of a production mesh ('pod'+'data')."""
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def data_axis_devices(mesh) -> tuple:
+    """One device per data-parallel slot of the mesh, in axis order.
+
+    The model axes are collapsed to their first column: a row-sharded
+    SpGEMM operand (shard s of A) lands on the s-th data slot, while B is
+    replicated.  This is the placement surface the partition-aware engine
+    uses (``repro.engine.partition``).
+    """
+    devs = np.asarray(mesh.devices)
+    axes = data_axes(mesh)
+    for i, name in enumerate(mesh.axis_names):
+        if name not in axes:
+            devs = np.take(devs, [0], axis=i)
+    return tuple(devs.flatten())
 
 
 def dp_size(mesh) -> int:

@@ -1,0 +1,375 @@
+"""Partition-aware engine tests: balance, sharded parity, per-shard
+growth, completion-order drain, and plan-cache persistence."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (CSR, SpgemmConfig, next_bucket, random_csr, spgemm,
+                        spgemm_reference)
+from repro.core.analysis import row_flops
+from repro.engine import (MatrixSig, PlanCache, ShardSpec, SpgemmEngine,
+                          balanced_bounds, plan_shards, shard_devices,
+                          total_traces)
+from repro.launch.mesh import data_axis_devices, make_host_mesh
+
+
+def _pair(seed, m=32, k=28, n=36, da=3.0, db=3.0, dist="uniform"):
+    A = random_csr(jax.random.PRNGKey(seed), m, k, avg_nnz_per_row=da,
+                   distribution=dist)
+    B = random_csr(jax.random.PRNGKey(seed + 1), k, n, avg_nnz_per_row=db,
+                   distribution=dist)
+    return A, B
+
+
+# ---------------------------------------------------------------------------
+# The partitioner: flop-balanced contiguous row blocks.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_shards", [2, 3, 4])
+def test_balanced_bounds_skewed_weights(n_shards):
+    # Skewed: a heavy head (100x the tail) — an even ROW split would give
+    # shard 0 nearly all the flops; the flop split must stay within 2x of
+    # the mean.
+    weights = np.concatenate([np.full(8, 100, np.int64),
+                              np.full(56, 1, np.int64)])
+    bounds = balanced_bounds(weights, n_shards)
+    assert bounds[0] == 0 and bounds[-1] == len(weights)
+    assert list(bounds) == sorted(bounds)
+    loads = [int(weights[bounds[s]:bounds[s + 1]].sum())
+             for s in range(n_shards)]
+    mean = weights.sum() / n_shards
+    assert max(loads) <= 2 * mean, (loads, mean)
+
+
+def test_balanced_bounds_on_flop_estimate():
+    # End-to-end with the real flop estimate on a powerlaw matrix.
+    A, B = _pair(11, m=128, da=4.0, dist="powerlaw")
+    flops = row_flops(A, B)
+    assert flops.dtype == np.int64        # host-side, wrap-proof weights
+    bounds = balanced_bounds(flops, 4)
+    loads = [int(flops[bounds[s]:bounds[s + 1]].sum()) for s in range(4)]
+    assert max(loads) <= 2 * (flops.sum() / 4), (loads, flops.sum())
+
+
+def test_balanced_bounds_degenerate_inputs():
+    assert balanced_bounds(np.zeros(6, np.int64), 3) == (0, 2, 4, 6)
+    assert balanced_bounds(np.ones(2, np.int64), 5) == (0, 1, 2)  # clamped
+    assert balanced_bounds(np.ones(0, np.int64), 3) == (0, 0)
+
+
+def test_plan_shards_buckets_are_pow2():
+    A, B = _pair(13, m=50, da=3.0)
+    spec = plan_shards(np.asarray(jax.device_get(A.rpt)),
+                       row_flops(A, B), 3)
+    assert spec.n_shards == 3
+    assert sum(spec.rows(s) for s in range(3)) == A.nrows
+    for s in range(3):
+        rb, cb = spec.row_buckets[s], spec.cap_buckets[s]
+        assert rb >= spec.rows(s) and rb & (rb - 1) == 0
+        assert cb & (cb - 1) == 0
+    # Per-shard growth touches only the grown shard's bucket.
+    grown = spec.with_cap_bucket(1, spec.cap_buckets[1] + 1)
+    assert grown.cap_buckets[1] > spec.cap_buckets[1]
+    assert grown.cap_buckets[0] == spec.cap_buckets[0]
+    assert grown.cap_buckets[2] == spec.cap_buckets[2]
+    assert grown.bounds == spec.bounds
+
+
+# ---------------------------------------------------------------------------
+# CSR.row_slice: the shard substrate.
+# ---------------------------------------------------------------------------
+
+def test_row_slice_roundtrip_and_padding():
+    A, _ = _pair(17, m=24)
+    dense = np.asarray(A.to_dense())
+    sl = A.row_slice(3, 17)
+    np.testing.assert_array_equal(np.asarray(sl.to_dense()), dense[3:17])
+    # Padded to static buckets: extra rows are empty, storage zero-filled.
+    padded = A.row_slice(3, 17, nrows=32, capacity=256)
+    assert padded.shape == (32, A.ncols) and padded.capacity == 256
+    out = np.asarray(padded.to_dense())
+    np.testing.assert_array_equal(out[:14], dense[3:17])
+    assert not out[14:].any()
+    # Whole-matrix slice is the identity in structure.
+    whole = A.row_slice(0, A.nrows)
+    np.testing.assert_array_equal(np.asarray(whole.to_dense()), dense)
+
+
+# ---------------------------------------------------------------------------
+# Sharded execution: parity with the unsharded path and the oracle.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["esc", "hash"])
+def test_sharded_matches_unsharded_bitwise(method):
+    A, B = _pair(23, m=48, dist="powerlaw")
+    ref = np.asarray(spgemm_reference(A, B))
+    base = SpgemmEngine(SpgemmConfig(method=method)).execute(A, B)
+    engine = SpgemmEngine(SpgemmConfig(method=method), shards=3)
+    for r in (engine.execute(A, B),       # cold (learns the partition)
+              engine.execute(A, B)):      # hot (per-shard executables)
+        np.testing.assert_allclose(np.asarray(r.C.to_dense()), ref,
+                                   rtol=1e-5, atol=1e-5)
+        assert r.total_nnz == base.total_nnz
+        assert r.total_nprod == base.total_nprod
+        np.testing.assert_array_equal(np.asarray(r.C.rpt),
+                                      np.asarray(base.C.rpt))
+        nnz = base.total_nnz
+        np.testing.assert_array_equal(np.asarray(r.C.col)[:nnz],
+                                      np.asarray(base.C.col)[:nnz])
+        np.testing.assert_allclose(np.asarray(r.C.val)[:nnz],
+                                   np.asarray(base.C.val)[:nnz])
+    parent = engine.cache.get(
+        (MatrixSig.of(A), MatrixSig.of(B),
+         SpgemmConfig(method=method, shards=3)))
+    assert parent is not None and parent.plan.shard_spec is not None
+
+
+def test_spgemm_shards_knob_routes_through_engine():
+    A, B = _pair(29)
+    ref = np.asarray(spgemm_reference(A, B))
+    r = spgemm(A, B, shards=2)
+    np.testing.assert_allclose(np.asarray(r.C.to_dense()), ref,
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_sharded_stream_zero_retraces_and_cache_hits():
+    engine = SpgemmEngine(shards=2)
+    A, B = _pair(31)
+    cap_a, cap_b = MatrixSig.of(A).cap_bucket, MatrixSig.of(B).cap_bucket
+    engine.execute(A, B)                   # cold: learns partition + buckets
+    engine.execute(A, B)                   # first hot call traces shards
+    baseline = total_traces()
+    for s in range(4):                     # distinct same-bucket matrices
+        A2, B2 = _pair(40 + s)
+        r = engine.execute(A2.with_capacity(cap_a), B2.with_capacity(cap_b))
+        ref = np.asarray(spgemm_reference(A2, B2))
+        np.testing.assert_allclose(np.asarray(r.C.to_dense()), ref,
+                                   rtol=1e-5, atol=1e-5)
+    assert total_traces() == baseline      # zero retraces on repeats
+    assert engine.stats.shard_grows == 0
+    assert engine.cache.hit_rate >= 0.75   # stream-wide, incl. cold misses
+
+
+def test_per_shard_bucket_growth_touches_one_shard():
+    m = 32
+    d_even = np.zeros((m, m), np.float32)
+    d_even[:, 0] = 1.0                     # 1 nnz/row, uniform balance
+    d_skew = np.zeros((m, m), np.float32)
+    d_skew[:, 0] = 1.0
+    d_skew[m // 2:, :24] = 1.0             # bottom half outgrows its slice
+    dB = np.eye(m, dtype=np.float32)
+    A_even = CSR.from_dense(d_even).with_capacity(1024)
+    A_skew = CSR.from_dense(d_skew).with_capacity(1024)
+    assert MatrixSig.of(A_even) == MatrixSig.of(A_skew)
+    Bc = CSR.from_dense(dB)
+
+    engine = SpgemmEngine(shards=2)
+    engine.execute(A_even, Bc)             # learns an even partition
+    key = (MatrixSig.of(A_even), MatrixSig.of(Bc),
+           SpgemmConfig(shards=2))
+    spec0 = engine.cache.get(key).plan.shard_spec
+    r = engine.execute(A_skew, Bc)         # shard 1's slice overflows
+    np.testing.assert_allclose(np.asarray(r.C.to_dense()), d_skew @ dB,
+                               rtol=1e-5)
+    assert engine.stats.shard_grows >= 1
+    spec1 = engine.cache.get(key).plan.shard_spec
+    assert spec1.bounds == spec0.bounds            # partition pinned
+    assert spec1.cap_buckets[0] == spec0.cap_buckets[0]   # shard 0 untouched
+    assert spec1.cap_buckets[1] > spec0.cap_buckets[1]    # shard 1 grown
+    r2 = engine.execute(A_skew, Bc)        # grown bucket now admits it
+    np.testing.assert_allclose(np.asarray(r2.C.to_dense()), d_skew @ dB,
+                               rtol=1e-5)
+
+
+def test_sharded_on_two_device_mesh_subprocess():
+    """Shard results land committed to different devices; the merge must
+    gather them home instead of crashing (regression: 'incompatible
+    devices for jitted computation').  Needs the device-count XLA flag
+    set before jax initializes, hence the subprocess."""
+    script = """
+import jax, numpy as np
+assert len(jax.devices()) == 2
+from repro.core import random_csr, spgemm_reference
+from repro.engine import SpgemmEngine
+from repro.launch.mesh import make_host_mesh
+A = random_csr(jax.random.PRNGKey(0), 40, 36, avg_nnz_per_row=3.0)
+B = random_csr(jax.random.PRNGKey(1), 36, 30, avg_nnz_per_row=3.0)
+eng = SpgemmEngine(shards=2, mesh=make_host_mesh())
+for _ in range(2):   # cold + hot
+    r = eng.execute(A, B)
+    np.testing.assert_allclose(np.asarray(r.C.to_dense()),
+                               np.asarray(spgemm_reference(A, B)),
+                               rtol=1e-5, atol=1e-5)
+"""
+    src = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=2",
+               JAX_PLATFORMS="cpu",
+               PYTHONPATH=src)
+    proc = subprocess.run([sys.executable, "-c", script], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+
+
+def test_sharded_with_mesh_placement():
+    mesh = make_host_mesh()
+    assert len(data_axis_devices(mesh)) >= 1
+    assert len(shard_devices(mesh, 3)) == 3
+    engine = SpgemmEngine(shards=2, mesh=mesh)
+    A, B = _pair(53)
+    r = engine.execute(A, B)
+    np.testing.assert_allclose(np.asarray(r.C.to_dense()),
+                               np.asarray(spgemm_reference(A, B)),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Completion-order drain.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("drain_ordered", [False, True])
+def test_drain_modes_match_oracle(drain_ordered):
+    engine = SpgemmEngine()
+    reqs = []
+    for s in range(6):
+        A, B = _pair(60 + s, m=24 if s % 2 else 40)   # mixed-size stream
+        reqs.append((engine.submit(A, B), A, B))
+    results = engine.drain(drain_ordered=drain_ordered)
+    assert len(results) == len(reqs)
+    for uid, A, B in reqs:
+        np.testing.assert_allclose(np.asarray(results[uid].C.to_dense()),
+                                   np.asarray(spgemm_reference(A, B)),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_sharded_drain_matches_oracle():
+    engine = SpgemmEngine(shards=2)
+    reqs = []
+    for s in range(4):
+        A, B = _pair(70 + s)
+        reqs.append((engine.submit(A, B), A, B))
+    results = engine.drain()
+    for uid, A, B in reqs:
+        np.testing.assert_allclose(np.asarray(results[uid].C.to_dense()),
+                                   np.asarray(spgemm_reference(A, B)),
+                                   rtol=1e-5, atol=1e-5)
+    assert engine.stats.sharded_requests == 4
+
+
+# ---------------------------------------------------------------------------
+# Plan-cache persistence.
+# ---------------------------------------------------------------------------
+
+def test_plan_cache_dump_load_roundtrip(tmp_path):
+    engine = SpgemmEngine()
+    A, B = _pair(81)
+    engine.execute(A, B)                                   # ESC plan
+    engine.execute(A, B, SpgemmConfig(method="hash"))      # hash schedule
+    engine.execute(A, B, SpgemmConfig(shards=2))           # shard spec
+    path = str(tmp_path / "plans.json")
+    n = engine.cache.dump(path)
+    assert n == len(engine.cache)
+
+    blob = json.load(open(path))
+    assert blob["version"] == 1 and len(blob["plans"]) == n
+
+    fresh = PlanCache()
+    assert fresh.load(path) == n
+    orig = {k: e.plan for k, e in engine.cache.items()}
+    for key, entry in fresh.items():
+        assert entry.plan == orig[key]
+        assert entry.executable is None    # executables are not persisted
+
+
+def test_loaded_cache_prewarms_fresh_engine(tmp_path):
+    A, B = _pair(91)
+    ref = np.asarray(spgemm_reference(A, B))
+    path = str(tmp_path / "plans.json")
+    warm = SpgemmEngine(SpgemmConfig(method="hash"), shards=2)
+    warm.execute(A, B)
+    warm.cache.dump(path)
+
+    engine = SpgemmEngine(SpgemmConfig(method="hash"), shards=2)
+    engine.cache.load(path)
+    r = engine.execute(A, B)               # straight to the hot path
+    np.testing.assert_allclose(np.asarray(r.C.to_dense()), ref,
+                               rtol=1e-5, atol=1e-5)
+    assert sum(e.stats.steps_calls for _, e in engine.cache.items()) == 0
+    assert engine.stats.capacity_grows == 0
+
+
+def test_sharded_requests_counted_once():
+    engine = SpgemmEngine(shards=3)
+    A, B = _pair(97)
+    engine.execute(A, B)
+    engine.execute(A, B)
+    assert engine.stats.requests == 2           # not 2 * (1 + n_shards)
+    assert engine.stats.sharded_requests == 2
+
+
+def test_explicit_config_opts_out_of_engine_sharding():
+    engine = SpgemmEngine(shards=3)
+    A, B = _pair(98)
+    r = engine.execute(A, B, SpgemmConfig(shards=1))   # explicit opt-out
+    np.testing.assert_allclose(np.asarray(r.C.to_dense()),
+                               np.asarray(spgemm_reference(A, B)),
+                               rtol=1e-5, atol=1e-5)
+    assert engine.stats.sharded_requests == 0
+
+
+def test_prewarm_rejects_sharded_config():
+    engine = SpgemmEngine(shards=2)
+    A, B = _pair(96)
+    with pytest.raises(ValueError):
+        engine.prewarm(A, B, prod_bucket=256, nnz_bucket=256)
+    # Explicit unsharded config still prewarms (the sub-problem path).
+    p = engine.prewarm(A, B, SpgemmConfig(shards=1),
+                       prod_bucket=256, nnz_bucket=256)
+    assert p.is_specialized
+
+
+def test_noop_load_keeps_live_executables(tmp_path):
+    engine = SpgemmEngine(shards=2)
+    A, B = _pair(99)
+    engine.execute(A, B)
+    engine.execute(A, B)                       # executables built
+    path = str(tmp_path / "plans.json")
+    engine.cache.dump(path)
+    before = {k: e.executable for k, e in engine.cache.items()}
+    assert any(x is not None for x in before.values())
+    engine.cache.load(path)                    # merge is a no-op
+    for key, entry in engine.cache.items():
+        assert entry.executable is before[key]  # zero-retrace state kept
+
+
+def test_shard_spec_union_is_monotone():
+    spec = ShardSpec(bounds=(0, 4, 8), row_buckets=(4, 4),
+                     cap_buckets=(64, 128))
+    bigger = ShardSpec(bounds=(0, 4, 8), row_buckets=(4, 4),
+                       cap_buckets=(256, 16))
+    assert spec.union(bigger).cap_buckets == (256, 128)
+    # Incomparable partitions keep self.
+    other = ShardSpec(bounds=(0, 2, 8), row_buckets=(2, 8),
+                      cap_buckets=(512, 512))
+    assert spec.union(other) is spec
+
+
+def test_load_merges_monotonically(tmp_path):
+    cfg = SpgemmConfig()
+    A, B = _pair(95)
+    engine = SpgemmEngine()
+    engine.prewarm(A, B, prod_bucket=256, nnz_bucket=256)
+    path = str(tmp_path / "plans.json")
+    engine.cache.dump(path)
+    # A cache holding BIGGER buckets must not shrink on load.
+    other = SpgemmEngine()
+    other.prewarm(A, B, prod_bucket=4096, nnz_bucket=4096)
+    other.cache.load(path)
+    p = other.cache.get((MatrixSig.of(A), MatrixSig.of(B), cfg)).plan
+    assert p.prod_bucket == 4096 and p.nnz_bucket == 4096
