@@ -20,20 +20,38 @@ shards whose plans must come from the cache (hit rate >=90% across shard
 plans, zero retraces after warmup), and the merged result must be
 bitwise-identical in nnz/structure to the unsharded path.
 
+``--fused`` (ISSUE 4, hash only) routes steady-state traffic through the
+fused symbolic->numeric executable with multi-row VMEM packing: one table
+build per row instead of two.  Extra gates: bitwise parity with the
+two-pass path on nnz/structure/values, and a measured per-row hash-table
+access reduction >= 1.5x vs symbolic+numeric.
+
+Every run also records a perf-trajectory artifact at the repo root
+(``BENCH_engine.json``): per-configuration steady-state latency, retrace
+count, and — for the hash method — table-access totals, so future PRs
+have a baseline to compare against.
+
 Run:  PYTHONPATH=src python benchmarks/bench_engine.py [--smoke]
-          [--method hash] [--shards 2]
+          [--method hash] [--fused] [--shards 2]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
+from pathlib import Path
 
 import jax
 import numpy as np
 
-from repro.core import SpgemmConfig, next_bucket, random_csr, spgemm_reference
+from repro.core import (SpgemmConfig, bin_rows_for_ladder, next_bucket,
+                        nprod_into_rpt, random_csr, spgemm_reference)
+from repro.core.analysis import exclusive_sum_in_place
 from repro.engine import SpgemmEngine, total_traces
+from repro.kernels import spgemm_hash
+
+BENCH_JSON = Path(__file__).resolve().parent.parent / "BENCH_engine.json"
 
 
 def build_stream(n_requests: int, m: int, k: int, n: int, avg: float):
@@ -52,12 +70,84 @@ def build_stream(n_requests: int, m: int, k: int, n: int, avg: float):
             for A, B in pairs]
 
 
+def measure_hash_accesses(A, B, config: SpgemmConfig, *,
+                          with_fused: bool = True):
+    """Fig.-9 access counters on one pair: two-pass vs fused table builds.
+
+    Returns ``(sym, num, fused)`` total table-transaction counts; the
+    fused build replaces sym+num, so ``(sym + num) / fused`` is the
+    measured per-call access reduction.  ``with_fused=False`` skips the
+    fused counter (None) so non-fused gates never touch the fused kernels.
+    """
+    m = A.nrows
+    sym_lad, num_lad = config.ladders()
+    nprod = nprod_into_rpt(A, B)[:m]
+    sym_bn = bin_rows_for_ladder(nprod, sym_lad)
+    nnz_buf, acc_s = spgemm_hash.symbolic_binned(
+        A, B, sym_bn, sym_lad, single_access=config.hash_single_access,
+        interpret=config.interpret, collect_accesses=True)
+    num_bn = bin_rows_for_ladder(nnz_buf[:m], num_lad)
+    cap = next_bucket(max(int(nnz_buf[:m].sum()), 1))
+    rpt = exclusive_sum_in_place(nnz_buf)
+    _, acc_n = spgemm_hash.numeric_binned(
+        A, B, rpt, num_bn, num_lad, nnz_capacity=cap,
+        single_access=config.hash_single_access,
+        interpret=config.interpret, collect_accesses=True)
+    if not with_fused:
+        return int(acc_s), int(acc_n), None
+    _, acc_f = spgemm_hash.fused_binned(
+        A, B, sym_bn, sym_lad, nnz_capacity=cap,
+        single_access=config.hash_single_access,
+        interpret=config.interpret, row_packing=config.row_packing,
+        collect_accesses=True)
+    return int(acc_s), int(acc_n), int(acc_f)
+
+
+def record_trajectory(key: str, entry: dict) -> None:
+    """Merge one configuration's results into ``BENCH_engine.json``.
+
+    An unparseable file (e.g. a run killed mid-write) is set aside as
+    ``BENCH_engine.json.corrupt`` instead of silently clobbered — the
+    trajectory is the baseline future PRs compare against.
+    """
+    payload = {}
+    if BENCH_JSON.exists():
+        try:
+            payload = json.loads(BENCH_JSON.read_text())
+        except (ValueError, OSError):
+            corrupt = BENCH_JSON.with_suffix(".json.corrupt")
+            BENCH_JSON.rename(corrupt)
+            print(f"WARNING: unreadable {BENCH_JSON.name} preserved as "
+                  f"{corrupt.name}; starting a fresh trajectory",
+                  file=sys.stderr)
+    payload[key] = entry
+    BENCH_JSON.write_text(json.dumps(payload, indent=1, sort_keys=True)
+                          + "\n")
+
+
+def result_parity(base, res, *, bitwise_val: bool) -> bool:
+    """nnz/rpt/col/val parity of two SpgemmResults (bitwise structure;
+    values bitwise or allclose — sharded merges may reorder FP sums)."""
+    nnz = base.total_nnz
+    val_eq = np.array_equal if bitwise_val else np.allclose
+    return (
+        res.total_nnz == nnz
+        and np.array_equal(np.asarray(res.C.rpt), np.asarray(base.C.rpt))
+        and np.array_equal(np.asarray(res.C.col)[:nnz],
+                           np.asarray(base.C.col)[:nnz])
+        and val_eq(np.asarray(res.C.val)[:nnz],
+                   np.asarray(base.C.val)[:nnz]))
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="small sizes for CI (~30 s)")
     ap.add_argument("--method", choices=("esc", "hash"), default="esc",
                     help="accumulator method for the whole stream")
+    ap.add_argument("--fused", action="store_true",
+                    help="hash only: fused one-build steady state with "
+                         "row packing (gates access reduction + parity)")
     ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--warmup", type=int, default=4,
                     help="requests before the zero-retrace gate arms "
@@ -78,10 +168,13 @@ def main(argv=None):
         args.requests, args.m, args.k, args.n = 20, 64, 64, 64
     if not 0 < args.warmup < args.requests:
         ap.error("--warmup must be in [1, effective --requests)")
+    if args.fused and args.method != "hash":
+        ap.error("--fused requires --method hash")
 
     stream = build_stream(args.requests, args.m, args.k, args.n, args.avg)
-    engine = SpgemmEngine(SpgemmConfig(method=args.method),
-                          shards=args.shards)
+    config = SpgemmConfig(method=args.method, fuse_numeric=args.fused,
+                          row_packing=args.fused)
+    engine = SpgemmEngine(config, shards=args.shards)
 
     # ---- phase 1: per-call wall-clock over the stream ---------------------
     times = []
@@ -127,17 +220,37 @@ def main(argv=None):
     if args.shards > 1:
         A0, B0 = stream[0]
         base = SpgemmEngine(SpgemmConfig(method=args.method)).execute(A0, B0)
-        res0 = engine.execute(A0, B0)
-        nnz = base.total_nnz
-        parity = (
-            res0.total_nnz == nnz
-            and np.array_equal(np.asarray(res0.C.rpt), np.asarray(base.C.rpt))
-            and np.array_equal(np.asarray(res0.C.col)[:nnz],
-                               np.asarray(base.C.col)[:nnz])
-            and np.allclose(np.asarray(res0.C.val)[:nnz],
-                            np.asarray(base.C.val)[:nnz]))
+        parity = result_parity(base, engine.execute(A0, B0),
+                               bitwise_val=False)
         print(f"shard parity:  {'OK' if parity else 'MISMATCH':>9s}  "
               f"({args.shards} shards vs unsharded: nnz/rpt/col/val)")
+
+    # ---- fused gates: bitwise parity with two-pass + access reduction -----
+    # The fused kernels are exercised only under --fused, so the plain
+    # --method hash gate keeps isolating two-pass regressions.
+    access = None
+    access_ok = True
+    if args.method == "hash":
+        A0, B0 = stream[0]
+        acc_s, acc_n, acc_f = measure_hash_accesses(
+            A0, B0, config, with_fused=args.fused)
+        access = {"symbolic": acc_s, "numeric": acc_n, "fused": acc_f}
+        if args.fused:
+            reduction = (acc_s + acc_n) / max(acc_f, 1)
+            access["reduction"] = round(reduction, 3)
+            access_ok = reduction >= 1.5
+            print(f"table access:  {acc_s + acc_n:9d} two-pass (sym {acc_s} "
+                  f"+ num {acc_n}) vs {acc_f} fused = "
+                  f"{reduction:.2f}x reduction")
+            base = SpgemmEngine(SpgemmConfig(method="hash")).execute(A0, B0)
+            fused_parity = result_parity(base, engine.execute(A0, B0),
+                                         bitwise_val=True)
+            print(f"fused parity:  {'OK' if fused_parity else 'MISMATCH':>9s}"
+                  f"  (fused vs two-pass oracle: nnz/rpt/col/val bitwise)")
+            parity = parity and fused_parity   # keep any shard MISMATCH
+        else:
+            print(f"table access:  {acc_s + acc_n:9d} two-pass "
+                  f"(sym {acc_s} + num {acc_n})")
 
     # ---- phase 2: batched submit/drain (double-buffered overlap) ----------
     uids = [engine.submit(A, B) for A, B in stream]
@@ -152,13 +265,35 @@ def main(argv=None):
     print()
     print(engine.report())
 
+    # ---- perf-trajectory artifact (baseline for future PRs) ---------------
+    # The workload shape is part of the key so a --smoke run never
+    # overwrites a full-size baseline recorded for the same config.
+    key = args.method + ("_fused" if args.fused else "")
+    if args.shards > 1:
+        key += f"_shards{args.shards}"
+    key += f"@{args.m}x{args.k}x{args.n}r{args.requests}"
+    record_trajectory(key, {
+        "requests": args.requests,
+        "shape": [args.m, args.k, args.n],
+        "cold_ms": round(cold * 1e3, 3),
+        "steady_ms": round(steady * 1e3, 4),
+        "speedup": round(speedup, 2),
+        "hit_rate": round(hit_rate, 4),
+        "retraces_after_warmup": retraces,
+        "drain_ms_per_request": round(drain_s / len(uids) * 1e3, 4),
+        "table_accesses": access,
+        "recorded_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
+    })
+    print(f"trajectory:    {BENCH_JSON.name} <- {key}")
+
     ok = (speedup >= 5.0 and hit_rate >= 0.90 and retraces == 0
-          and parity)
+          and parity and access_ok)
     print()
     print("PASS" if ok else "FAIL",
           f"(speedup {speedup:.1f}x, hit rate {hit_rate * 100:.1f}%, "
           f"{retraces} steady-state retraces"
-          + ("" if parity else ", shard parity MISMATCH") + ")")
+          + ("" if parity else ", parity MISMATCH")
+          + ("" if access_ok else ", access reduction < 1.5x") + ")")
     return 0 if ok else 1
 
 

@@ -1,10 +1,16 @@
-"""Fig. 9 reproduction: single-access vs multi-access hashing.
+"""Fig. 9 reproduction: single-access vs multi-access hashing + fusion.
 
 The paper's §5.2 claim: one hash-table transaction per probe iteration
 (instead of nsparse/spECK's check-then-CAS) gives ~1.09-1.10x on the
 symbolic/numeric steps.  Our Pallas kernels implement BOTH disciplines and
 count table transactions exactly (the architecture-independent quantity);
 interpret-mode wall time is also reported (CPU-emulated, directional).
+
+Extended (ISSUE 4): the same counters measure the FUSED one-build pipeline
+(``fused_binned``, optionally row-packed) against the two-pass total —
+building each row's table once instead of twice should roughly halve the
+per-row transactions; the reported ``fused_access_reduction`` is the
+measured (sym + num) / fused ratio on both probe disciplines.
 """
 from __future__ import annotations
 
@@ -67,12 +73,28 @@ def run() -> List[str]:
         (_, nacc_s) = num(True)
         (_, nacc_m) = num(False)
 
+        # fused one-build pipeline (opt. 2 extended): one table build per
+        # row replaces the symbolic+numeric double build; packed kernels
+        # batch small rows per VMEM tile (identical transaction counts —
+        # packing changes occupancy, not probing).
+        def fused(single, packed):
+            C, acc = spgemm_hash.fused_binned(
+                A, B, bn, lad, nnz_capacity=cap, single_access=single,
+                row_packing=packed, collect_accesses=True)
+            return C.val, int(acc)
+
+        (_, facc_s) = fused(True, True)
+        (_, facc_m) = fused(False, True)
+
         rows.append(
             f"bench_hashing/{name},{t_s*1e6:.0f},"
             f"sym_accesses_single={acc_s};sym_accesses_multi={acc_m};"
             f"sym_access_reduction={acc_m/max(acc_s,1):.3f}x;"
             f"num_accesses_single={nacc_s};num_accesses_multi={nacc_m};"
             f"num_access_reduction={nacc_m/max(nacc_s,1):.3f}x;"
+            f"fused_accesses_single={facc_s};fused_accesses_multi={facc_m};"
+            f"fused_access_reduction={(acc_s+nacc_s)/max(facc_s,1):.3f}x;"
+            f"fused_access_reduction_multi={(acc_m+nacc_m)/max(facc_m,1):.3f}x;"
             f"sym_time_speedup={t_m/max(t_s,1e-9):.2f}x")
         print(rows[-1], flush=True)
     return rows

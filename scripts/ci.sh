@@ -17,5 +17,9 @@ echo "== engine smoke benchmark (hash method: zero-retrace steady state) =="
 python benchmarks/bench_engine.py --smoke --method hash
 
 echo
+echo "== engine smoke benchmark (fused hash: one-build tables + row packing) =="
+python benchmarks/bench_engine.py --smoke --method hash --fused
+
+echo
 echo "== engine smoke benchmark (sharded: partition parity + plan reuse) =="
 python benchmarks/bench_engine.py --smoke --shards 2

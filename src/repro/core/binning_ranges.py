@@ -40,6 +40,28 @@ VMEM_BUDGET_BYTES = 8 * 1024 * 1024  # usable slice of the ~16 MiB core VMEM
 SYMBOLIC_NOMINAL_VMEM = SYMBOLIC_NOMINAL + (65536, 262144, 1048576)
 NUMERIC_NOMINAL_VMEM = NUMERIC_NOMINAL + (32768, 131072, 524288)
 
+# Row packing (multi-row VMEM tiles): the smallest int32 VMEM tile is
+# (8, 128) = 1024 entries, so a rung whose table is smaller than that
+# leaves most of the tile (and the VPU lanes striding it) idle when one
+# grid step owns one row.  Low rungs therefore pack
+# ``rows_per_block = PACK_TILE_ENTRIES // t_size`` rows per grid step as
+# independent sub-tables inside one tile — rung occupancy scales with the
+# tile instead of the row (the batched-by-row-class sizing of Liu &
+# Vinter, and the paper's §5.6 utilization-vs-collision trade-off knob).
+PACK_TILE_ENTRIES = 8 * 128
+
+
+def rows_per_block_of(t_size: int) -> int:
+    """Pow-2 sub-tables of size ``t_size`` packable into one VMEM tile.
+
+    Kept a power of two so packed row-count buckets (pow-2 as well)
+    always divide evenly into grid steps.
+    """
+    pack = 1
+    while pack * 2 * t_size <= PACK_TILE_ENTRIES:
+        pack *= 2
+    return pack
+
 
 @dataclasses.dataclass(frozen=True)
 class BinLadder:
@@ -53,6 +75,16 @@ class BinLadder:
     table_sizes: Tuple[int, ...]   # per-rung accumulator table size
     upper: Tuple[int, ...]         # per-rung inclusive upper bound on row size
     multiplier: float              # the paper's range multiplier (1x/1.2x/...)
+    # Pow-2 rows a packed kernel batches per grid step on each rung (1 on
+    # rungs whose table already fills a VMEM tile).  Derived from
+    # ``table_sizes`` when not given, so every construction site gets it.
+    rows_per_block: Tuple[int, ...] = ()
+
+    def __post_init__(self):
+        if not self.rows_per_block:
+            object.__setattr__(
+                self, "rows_per_block",
+                tuple(rows_per_block_of(t) for t in self.table_sizes))
 
     @property
     def num_bins(self) -> int:

@@ -40,7 +40,12 @@ class SpgemmConfig:
     vmem_extended: bool = False      # TPU ladder extension (DESIGN.md §5)
     hash_single_access: bool = True  # §5.2 single-access vs multi-access
     fuse_esc: bool = False           # beyond-paper single-expansion ESC
-    interpret: bool = True           # Pallas interpret mode (CPU container)
+    fuse_numeric: bool = False       # hash: one-build symbolic->numeric fusion
+    row_packing: bool = False        # hash: pack small rows per VMEM tile
+    # Pallas interpret mode: None = auto-detect (interpret everywhere but a
+    # real TPU backend, so the same code runs compiled on hardware without
+    # callers threading the flag; see repro.kernels.resolve_interpret).
+    interpret: Optional[bool] = None
     timing: bool = False             # per-step wall-clock (benchmarks)
     shards: int = 1                  # row-block shards of A (engine fan-out)
 

@@ -141,9 +141,15 @@ def _execute_steps(A: CSR, B: CSR, plan: SpgemmPlan,
     # ---- step3: symbolic ----------------------------------------------------
     sym_buckets = sym_fall = None
     if config.method == "hash":
+        # Packed fused configs need pack-aligned sym buckets (the fused
+        # kernels batch rows_per_block rows per grid step); learning them
+        # aligned here keeps every later union/floor aligned too.
+        sym_packs = (sym_ladder.rows_per_block
+                     if config.fuse_numeric and config.row_packing else None)
         sym_buckets, sym_fall = _floor_schedule(
             *spgemm_hash.host_schedule(A, B, sym_binning, sym_ladder,
-                                       headroom=_SCHEDULE_HEADROOM),
+                                       headroom=_SCHEDULE_HEADROOM,
+                                       packs=sym_packs),
             sched.sym_row_buckets if sched else None,
             sched.sym_fall_prod_bucket if sched else 0)
         nnz_buf, _, _ = spgemm_hash.symbolic_scheduled(
@@ -292,6 +298,55 @@ def _build_hash_executable(plan: SpgemmPlan) -> Callable:
             interpret=config.interpret)
         return (C, total_nprod, total_nnz, sym_binning, num_binning,
                 sym_fall_prod, num_fall_prod)
+
+    return run
+
+
+def _build_fused_hash_executable(plan: SpgemmPlan) -> Callable:
+    """Jit the FUSED hash pipeline against a specialized plan.
+
+    ``fuse_numeric`` steady state: one n_prod binning (symbolic ladder),
+    one table build per row (``spgemm_hash.fused_scheduled``) emitting
+    nnz AND accumulated values, so the paper's symbolic/numeric table
+    double-build collapses to a single probe pass — roughly half the
+    per-row table transactions of the two-pass executable (the cold
+    steps path, which stays the parity oracle).  The finalize sync
+    verifies only the sym schedule + fallback product + nnz bucket
+    (there is no numeric binning to check).
+    """
+    assert (plan.is_specialized and plan.config.method == "hash"
+            and plan.config.fuse_numeric)
+    m = plan.a_sig.nrows
+    config = plan.config
+    sym_ladder, num_ladder = plan.sym_ladder, plan.num_ladder
+    sched = plan.hash_schedule
+    nnz_cap = plan.nnz_bucket
+    key = plan.signature
+
+    @jax.jit
+    def run(A: CSR, B: CSR):
+        stats_mod.record_trace(key)      # fires once per trace (recompile)
+        rpt_buf = nprod_into_rpt(A, B)
+        nprod = rpt_buf[:m]
+        total_nprod = jnp.sum(nprod)
+        sym_binning = bin_rows(nprod, upper=sym_ladder.upper,
+                               num_bins=sym_ladder.num_bins)
+        C, nnz, sym_fall_prod, _ = spgemm_hash.fused_scheduled(
+            A, B, sym_binning, sym_ladder,
+            row_buckets=sched.sym_row_buckets,
+            nnz_capacity=nnz_cap,
+            fallback_prod_capacity=sched.sym_fall_prod_bucket,
+            single_access=config.hash_single_access,
+            interpret=config.interpret,
+            row_packing=config.row_packing)
+        total_nnz = jnp.sum(nnz)
+        # No numeric phase runs, but the n_nz binning stays part of the
+        # result so fused steady-state calls report the same telemetry
+        # shape as cold calls (it's a cheap histogram, not a probe pass).
+        num_binning = bin_rows(nnz, upper=num_ladder.upper,
+                               num_bins=num_ladder.num_bins)
+        return (C, total_nprod, total_nnz, sym_binning, num_binning,
+                sym_fall_prod)
 
     return run
 
@@ -617,8 +672,12 @@ class SpgemmEngine:
             return _Finished(uid, result)
 
         if entry.executable is None:
-            builder = (_build_hash_executable if config.method == "hash"
-                       else _build_hot_executable)
+            if config.method != "hash":
+                builder = _build_hot_executable
+            elif config.fuse_numeric:
+                builder = _build_fused_hash_executable
+            else:
+                builder = _build_hash_executable
             entry.executable = builder(plan)
         handles = entry.executable(A, B)         # async dispatch, no sync
         entry.stats.hot_calls += 1
@@ -697,7 +756,21 @@ class SpgemmEngine:
         # actually executed with, and passing its check would return a
         # silently truncated C.
         plan = rec.plan
-        if plan.config.method == "hash":
+        if plan.config.method == "hash" and plan.config.fuse_numeric:
+            C, tnp, tnz, sym_binning, num_binning, sym_fall = rec.handles
+            # The ONE host sync: totals + sym bin sizes + fallback product
+            # (num_binning is telemetry only — no numeric pass to verify).
+            fetched = jax.device_get(
+                (tnp, tnz, sym_binning.bin_size, sym_fall))
+            total_nprod, total_nnz = int(fetched[0]), int(fetched[1])
+            schedule_ok = plan.hash_schedule.admits_fused(
+                fetched[2], int(fetched[3]))
+            if not schedule_ok:
+                self.stats.bin_overflows += 1
+                rec.entry.stats.bin_overflows += 1
+            if not schedule_ok or total_nnz > plan.nnz_bucket:
+                return self._grow_and_redo(rec, total_nprod, total_nnz)
+        elif plan.config.method == "hash":
             (C, tnp, tnz, sym_binning, num_binning,
              sym_fall, num_fall) = rec.handles
             # The ONE host sync: totals + bin sizes + fallback products.

@@ -101,12 +101,22 @@ class HashSchedule:
         schedule it was dispatched with (rows beyond a bucket — or
         fallback products beyond their capacity — were truncated)."""
         return (
-            all(int(s) <= b for s, b in zip(sym_bin_sizes,
-                                            self.sym_row_buckets))
+            self.admits_fused(sym_bin_sizes, sym_fall_prod)
             and all(int(s) <= b for s, b in zip(num_bin_sizes,
                                                 self.num_row_buckets))
-            and int(sym_fall_prod) <= self.sym_fall_prod_bucket
             and int(num_fall_prod) <= self.num_fall_prod_bucket)
+
+    def admits_fused(self, sym_bin_sizes, sym_fall_prod: int) -> bool:
+        """Fused-pipeline admission (``SpgemmConfig.fuse_numeric``): the
+        one table build is scheduled off the SYMBOLIC ladder alone — there
+        is no numeric binning/probe pass to verify.  When a packed config
+        learned this schedule the sym buckets are additionally multiples
+        of each rung's ``rows_per_block`` (``host_schedule(packs=...)``;
+        pow-2 unions preserve the alignment)."""
+        return (
+            all(int(s) <= b for s, b in zip(sym_bin_sizes,
+                                            self.sym_row_buckets))
+            and int(sym_fall_prod) <= self.sym_fall_prod_bucket)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,3 +1,24 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+"""Shared kernel-layer runtime helpers."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+
+def default_interpret() -> bool:
+    """Whether Pallas kernels should run in interpret mode by default.
+
+    Interpret mode emulates the TPU grid on the host — required in CPU
+    containers, pure overhead on real hardware.  Auto-detection keeps one
+    code path: compiled on a TPU backend, interpreted everywhere else.
+    """
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """Resolve an ``interpret`` knob: ``None`` means auto-detect."""
+    return default_interpret() if interpret is None else bool(interpret)

@@ -15,12 +15,14 @@ paper gets from atomics).
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import resolve_interpret
 
 
 def _make_kernel(upper: Tuple[int, ...], num_bins: int, block: int,
@@ -57,10 +59,12 @@ def _make_kernel(upper: Tuple[int, ...], num_bins: int, block: int,
                    static_argnames=("upper", "num_bins", "block",
                                     "interpret"))
 def binning_histogram(sizes, *, upper: Tuple[int, ...], num_bins: int,
-                      block: int = 1024, interpret: bool = True):
+                      block: int = 1024, interpret: Optional[bool] = None):
     """Pass-1 of the binning method as a Pallas kernel.
 
-    Returns (bin_size (num_bins,) int32, max_size () int32)."""
+    ``interpret=None`` auto-detects (compiled on TPU, interpreted
+    elsewhere).  Returns (bin_size (num_bins,) int32, max_size () int32)."""
+    interpret = resolve_interpret(interpret)
     m = sizes.shape[0]
     m_pad = -(-m // block) * block
     if m_pad != m:

@@ -18,23 +18,28 @@ so the output index_map can place each step's stripe.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import resolve_interpret
+
 
 @functools.partial(jax.jit, static_argnames=("n_block_rows", "interpret"))
 def bsr_spmm(blk_rows, blk_cols, blocks, dense, *, n_block_rows: int,
-             interpret: bool = True):
+             interpret: Optional[bool] = None):
     """(BCSR blocks) @ dense.
 
     blk_rows/blk_cols: (nnzb,) int32 sorted by row (CSR block order);
     blocks: (nnzb, bm, bk); dense: (K, N) with K = n_block_cols * bk.
     Returns (n_block_rows * bm, N).  Padding blocks: row id = a repeat of
     the last row with a zero block (contributes nothing).
+    ``interpret=None`` auto-detects (compiled on TPU, interpreted elsewhere).
     """
+    interpret = resolve_interpret(interpret)
     nnzb, bm, bk = blocks.shape
     n = dense.shape[1]
     dense_b = dense.reshape(-1, bk, n)

@@ -34,11 +34,27 @@ Sorting/condensing (paper's numeric "condense + sort" phases): done as a
 tables.  On TPU, sorts vectorize on the VPU, whereas in-kernel scalar
 condense loops would serialize; this is the hardware adaptation recorded in
 DESIGN.md.
+
+Fusion (paper opt. 2, taken one step further): the two-pass flow builds
+every row's hash table TWICE — the symbolic phase counts it, the numeric
+phase rebuilds it from scratch to accumulate values.  ``fused_bin_call``
+builds the (col, val) table ONCE per row and emits nnz, the raw table, and
+the per-row transaction count in one ``pallas_call``; the numeric result
+reuses the symbolic build instead of re-probing, roughly halving per-row
+table transactions (measured by the Fig.-9 access counters, not asserted).
+The two-pass kernels stay as the parity/access-count oracle.
+
+Row packing (paper opt. 3 trade-off, TPU form): a rung whose table is
+smaller than the minimum (8, 128) int32 VMEM tile leaves most of the tile
+idle when one grid step owns one row.  With ``row_packing`` the fused
+kernel packs ``ladder.rows_per_block[b]`` rows per grid step as independent
+sub-tables inside one tile (per-sub-row offsets from scalar prefetch), so
+rung occupancy scales with the tile instead of the row.
 """
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -47,10 +63,12 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import esc
+from repro.core.analysis import exclusive_sum_in_place
 from repro.core.binning import Binning
 from repro.core.binning_ranges import BinLadder
 from repro.core.csr import CSR, gather_rows
 from repro.core.workspace import next_bucket
+from repro.kernels import resolve_interpret
 
 HASH_SCALE = 107  # nsparse's multiplicative constant, kept (§5.2 "same way")
 _PROBE_GUARD_FACTOR = 2  # safety: bail after 2*t_size probes (misuse guard)
@@ -160,12 +178,13 @@ def _make_symbolic_kernel(t_size: int, single_access: bool):
     static_argnames=("t_size", "rows_cap", "single_access", "interpret"))
 def symbolic_bin_call(rows, count, a_rpt, a_col, b_rpt, b_col, *,
                       t_size: int, rows_cap: int, single_access: bool,
-                      interpret: bool):
+                      interpret: Optional[bool] = None):
     """Run the symbolic hash kernel over one bin.
 
     rows:  (rows_cap,) int32 row ids (padded); count: (1,) int32 valid rows.
     Returns (nnz, accesses): both (rows_cap,) int32.
     """
+    interpret = resolve_interpret(interpret)
     t_rows, t_lanes = _table_geom(t_size)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
@@ -273,13 +292,14 @@ def _make_numeric_kernel(t_size: int, single_access: bool, val_dtype):
     static_argnames=("t_size", "rows_cap", "single_access", "interpret"))
 def numeric_bin_call(rows, count, a_rpt, a_col, a_val, b_rpt, b_col, b_val,
                      *, t_size: int, rows_cap: int, single_access: bool,
-                     interpret: bool):
+                     interpret: Optional[bool] = None):
     """Run the numeric hash kernel over one bin.
 
     Returns (col_tabs, val_tabs, accesses):
       col_tabs (rows_cap, t_pad) int32 — raw hash tables (-1 = empty);
       val_tabs (rows_cap, t_pad);  accesses (rows_cap,) int32.
     """
+    interpret = resolve_interpret(interpret)
     t_rows, t_lanes = _table_geom(t_size)
     t_pad = t_rows * t_lanes
     val_dtype = a_val.dtype
@@ -304,6 +324,165 @@ def numeric_bin_call(rows, count, a_rpt, a_col, a_val, b_rpt, b_col, b_val,
         out_shape=[
             jax.ShapeDtypeStruct((rows_cap, t_pad), jnp.int32),
             jax.ShapeDtypeStruct((rows_cap, t_pad), val_dtype),
+            jax.ShapeDtypeStruct((rows_cap,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(rows, count, a_rpt, a_col, a_val, b_rpt, b_col, b_val)
+
+
+# ---------------------------------------------------------------------------
+# Fused symbolic->numeric kernel: ONE table build per row emits nnz AND the
+# accumulated (col, val) table — with optional multi-row VMEM packing.
+# ---------------------------------------------------------------------------
+
+def _packed_geom(t_size: int, pack: int) -> Tuple[int, int]:
+    """Packed VMEM scratch geometry.
+
+    ``pack`` sub-tables of ``t_size`` entries live at stride ``stride``
+    inside one lane-aligned (t_rows, 128) tile; returns (t_rows, stride).
+    ``pack`` must be a power of two <= 128 so the tile splits evenly.
+    """
+    assert pack >= 1 and pack & (pack - 1) == 0 and pack <= 128, pack
+    t_rows = max(1, -(-(pack * t_size) // 128))
+    flat = t_rows * 128
+    assert flat % pack == 0, (t_size, pack)
+    return t_rows, flat // pack
+
+
+def _make_fused_kernel(t_size: int, pack: int, single_access: bool,
+                       val_dtype):
+    t_rows, stride = _packed_geom(t_size, pack)
+    guard = _PROBE_GUARD_FACTOR * t_size
+
+    def kernel(rows_smem, count_smem, a_rpt, a_col, a_val, b_rpt, b_col,
+               b_val, nnz_out, col_out, val_out, acc_out, col_tab, val_tab):
+        i = pl.program_id(0)
+        # One fresh tile per grid step; sub-row j owns the slice
+        # [j*stride, j*stride + t_size) of the flattened tile.
+        col_tab[...] = jnp.full((t_rows, 128), -1, jnp.int32)
+        val_tab[...] = jnp.zeros((t_rows, 128), val_dtype)
+
+        for j in range(pack):           # static unroll over the sub-tables
+            idx = i * pack + j
+            active = idx < count_smem[0]
+            r = rows_smem[idx]
+            base = j * stride
+            a_lo = jnp.where(active, a_rpt[r], 0)
+            a_hi = jnp.where(active, a_rpt[r + 1], 0)
+
+            def insert(key, prod, carry, base=base):
+                nnz, acc = carry
+                h0 = _hash_init(key, t_size)
+
+                def cond(st):
+                    h, done, ins, probes = st
+                    return (~done) & (probes < guard)
+
+                if single_access:
+                    # Alg 4/5 discipline: ONE col-table transaction per
+                    # probe iteration; value touched on the terminal one.
+                    def body(st):
+                        h, done, ins, probes = st
+                        slot = base + h
+                        hr, hl = slot // 128, slot % 128
+                        cur = col_tab[hr, hl]                 # 1 transaction
+                        empty = cur == -1
+                        hit = empty | (cur == key)
+                        col_tab[hr, hl] = jnp.where(empty, key, cur)
+                        val_tab[hr, hl] = val_tab[hr, hl] + jnp.where(
+                            hit, prod, jnp.zeros((), val_dtype))
+                        return (_hash_next(h, t_size), hit, ins | empty,
+                                probes + 1)
+                else:
+                    # nsparse-style check-then-CAS baseline.
+                    def body(st):
+                        h, done, ins, probes = st
+                        slot = base + h
+                        hr, hl = slot // 128, slot % 128
+                        cur = col_tab[hr, hl]                 # transaction 1
+                        empty = cur == -1
+                        cur2 = jnp.where(empty, col_tab[hr, hl], cur)  # 2
+                        col_tab[hr, hl] = jnp.where(empty, key, cur2)
+                        hit = empty | (cur == key)
+                        val_tab[hr, hl] = val_tab[hr, hl] + jnp.where(
+                            hit, prod, jnp.zeros((), val_dtype))
+                        return (_hash_next(h, t_size), hit, ins | empty,
+                                probes +
+                                jnp.where(empty, 2, 1).astype(jnp.int32))
+
+                h, done, ins, probes = jax.lax.while_loop(
+                    cond, body, (h0, jnp.asarray(False), jnp.asarray(False),
+                                 jnp.int32(0)))
+                return nnz + ins.astype(jnp.int32), acc + probes
+
+            def outer(e, carry):
+                k = a_col[a_lo + e]
+                av = a_val[a_lo + e]
+                b_lo = b_rpt[k]
+                b_hi = b_rpt[k + 1]
+
+                def inner(jj, carry):
+                    c = b_col[b_lo + jj]
+                    bv = b_val[b_lo + jj]
+                    return insert(c, av * bv, carry)
+
+                return jax.lax.fori_loop(0, b_hi - b_lo, inner, carry)
+
+            nnz, acc = jax.lax.fori_loop(0, a_hi - a_lo, outer,
+                                         (jnp.int32(0), jnp.int32(0)))
+            nnz_out[j] = jnp.where(active, nnz, 0)
+            acc_out[j] = jnp.where(active, acc, 0)
+
+        col_out[...] = col_tab[...].reshape(pack, stride)
+        val_out[...] = val_tab[...].reshape(pack, stride)
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("t_size", "rows_cap", "pack", "single_access",
+                     "interpret"))
+def fused_bin_call(rows, count, a_rpt, a_col, a_val, b_rpt, b_col, b_val,
+                   *, t_size: int, rows_cap: int, pack: int = 1,
+                   single_access: bool = True, interpret: Optional[bool] = None):
+    """Run the fused symbolic->numeric hash kernel over one bin.
+
+    One grid step builds ``pack`` rows' tables as sub-tables of one VMEM
+    tile (``pack=1`` reproduces the one-row-per-step layout).  Returns
+    ``(nnz, col_tabs, val_tabs, accesses)``:
+      nnz      (rows_cap,) int32 — distinct columns per row;
+      col_tabs (rows_cap, stride) int32 — raw per-row tables (-1 empty);
+      val_tabs (rows_cap, stride) — accumulated values;
+      accesses (rows_cap,) int32 — per-row table transactions.
+    """
+    interpret = resolve_interpret(interpret)
+    assert rows_cap % pack == 0, (rows_cap, pack)
+    t_rows, stride = _packed_geom(t_size, pack)
+    val_dtype = a_val.dtype
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(rows_cap // pack,),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)] * 6,
+        out_specs=[
+            pl.BlockSpec((pack,), lambda i, rows, cnt: (i,)),
+            pl.BlockSpec((pack, stride), lambda i, rows, cnt: (i, 0)),
+            pl.BlockSpec((pack, stride), lambda i, rows, cnt: (i, 0)),
+            pl.BlockSpec((pack,), lambda i, rows, cnt: (i,)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((t_rows, 128), jnp.int32),
+            pltpu.VMEM((t_rows, 128), val_dtype),
+        ],
+    )
+    kernel = _make_fused_kernel(t_size, pack, single_access, val_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((rows_cap,), jnp.int32),
+            jax.ShapeDtypeStruct((rows_cap, stride), jnp.int32),
+            jax.ShapeDtypeStruct((rows_cap, stride), val_dtype),
             jax.ShapeDtypeStruct((rows_cap,), jnp.int32),
         ],
         interpret=interpret,
@@ -372,7 +551,7 @@ def _check_schedule(row_buckets, ladder: BinLadder, fallback_prod_capacity):
 
 def symbolic_scheduled(A: CSR, B: CSR, binning: Binning, ladder: BinLadder,
                        *, row_buckets, fallback_prod_capacity: int = 0,
-                       single_access: bool = True, interpret: bool = True,
+                       single_access: bool = True, interpret: Optional[bool] = None,
                        collect_accesses: bool = False):
     """Symbolic phase over a static bucketed schedule — fully traceable.
 
@@ -419,7 +598,7 @@ def symbolic_scheduled(A: CSR, B: CSR, binning: Binning, ladder: BinLadder,
 
 
 def host_schedule(A: CSR, B: CSR, binning: Binning, ladder: BinLadder, *,
-                  headroom: float = 1.0):
+                  headroom: float = 1.0, packs: Tuple[int, ...] = None):
     """Host-side schedule derivation (the cold path's ONE metadata sync).
 
     Reads the device bin sizes, buckets each rung's row count to a pow-2
@@ -429,6 +608,11 @@ def host_schedule(A: CSR, B: CSR, binning: Binning, ladder: BinLadder, *,
     learns schedules with headroom so steady-state bin-count jitter stays
     inside the learned buckets instead of forcing retraces: padding rows
     are masked grid steps, far cheaper than a recompile).
+
+    ``packs`` (per table rung, e.g. ``ladder.rows_per_block``) floors each
+    populated rung's bucket at its pow-2 rows-per-block so packed kernels
+    always get a whole number of grid steps; padding rows beyond the bin
+    count are masked sub-tables.
     """
     sizes = np.asarray(binning.bin_size)       # host sync: launch schedule
     m_cap = next_bucket(binning.bins.shape[0], minimum=_ROW_BUCKET_MIN)
@@ -438,10 +622,18 @@ def host_schedule(A: CSR, B: CSR, binning: Binning, ladder: BinLadder, *,
     # failure the headroom exists to prevent).  headroom=1.0 (the faithful
     # per-call path) keeps exact buckets.
     strict = 1 if headroom > 1.0 else 0
-    row_buckets = tuple(
-        min(m_cap, next_bucket(int(np.ceil(int(s) * headroom)) + strict,
-                               minimum=_ROW_BUCKET_MIN)) if s else 0
-        for s in sizes)
+
+    def bucket_of(b: int, s: int) -> int:
+        if not s:
+            return 0
+        lo = _ROW_BUCKET_MIN
+        if packs is not None and b < len(packs):
+            lo = max(lo, packs[b])
+        return min(max(m_cap, lo),
+                   next_bucket(int(np.ceil(int(s) * headroom)) + strict,
+                               minimum=lo))
+
+    row_buckets = tuple(bucket_of(b, int(s)) for b, s in enumerate(sizes))
     fallback_prod_capacity = 0
     if row_buckets[-1]:
         rows, valid = _fallback_rows(binning, ladder, row_buckets[-1],
@@ -456,7 +648,7 @@ def host_schedule(A: CSR, B: CSR, binning: Binning, ladder: BinLadder, *,
 
 def symbolic_binned(A: CSR, B: CSR, binning: Binning, ladder: BinLadder, *,
                     prod_capacity: int = 0, single_access: bool = True,
-                    interpret: bool = True,
+                    interpret: Optional[bool] = None,
                     collect_accesses: bool = False):
     """Host-orchestrated symbolic phase (cold / standalone path).
 
@@ -494,7 +686,7 @@ def nprod_of_rows(A: CSR, B: CSR, rows: jax.Array) -> jax.Array:
 def numeric_scheduled(A: CSR, B: CSR, rpt: jax.Array, binning: Binning,
                       ladder: BinLadder, *, row_buckets,
                       nnz_capacity: int, fallback_prod_capacity: int = 0,
-                      single_access: bool = True, interpret: bool = True,
+                      single_access: bool = True, interpret: Optional[bool] = None,
                       collect_accesses: bool = False):
     """Numeric phase over a static bucketed schedule — fully traceable.
 
@@ -544,7 +736,7 @@ def numeric_scheduled(A: CSR, B: CSR, rpt: jax.Array, binning: Binning,
 def numeric_binned(A: CSR, B: CSR, rpt: jax.Array, binning: Binning,
                    ladder: BinLadder, *, prod_capacity: int = 0,
                    nnz_capacity: int, single_access: bool = True,
-                   interpret: bool = True,
+                   interpret: Optional[bool] = None,
                    collect_accesses: bool = False):
     """Host-orchestrated numeric phase (cold / standalone path) -> CSR.
 
@@ -558,6 +750,119 @@ def numeric_binned(A: CSR, B: CSR, rpt: jax.Array, binning: Binning,
         nnz_capacity=nnz_capacity, fallback_prod_capacity=fall_cap,
         single_access=single_access, interpret=interpret,
         collect_accesses=collect_accesses)
+    if collect_accesses:
+        return C, accesses
+    return C
+
+
+def fused_scheduled(A: CSR, B: CSR, binning: Binning, ladder: BinLadder, *,
+                    row_buckets, nnz_capacity: int,
+                    fallback_prod_capacity: int = 0,
+                    single_access: bool = True, interpret: Optional[bool] = None,
+                    row_packing: bool = False,
+                    collect_accesses: bool = False):
+    """Fused symbolic->numeric phase over a static schedule — traceable.
+
+    ONE binning (by n_prod, the symbolic ladder — the only pre-data row
+    size), ONE table build per row: each populated rung's
+    :func:`fused_bin_call` emits per-row nnz AND the accumulated (col,
+    val) tables, the fallback rung runs the single-expansion ESC
+    (``esc.spgemm_fused``, its n_nz read off the sub-result's rpt), and
+    once every row's nnz is known the row pointers are an exclusive sum
+    and the dumped tables condense/sort/scatter into C — no second probe
+    pass anywhere.  The symbolic-ladder tables are sized by n_prod
+    (>= n_nz), so the numeric accumulation can never overflow them; the
+    larger tables trade VMEM footprint for a LOWER collision rate than
+    the two-pass numeric rungs (§5.6's trade-off, resolved towards fewer
+    transactions).
+
+    ``row_packing`` batches ``ladder.rows_per_block[b]`` rows per grid
+    step on rungs whose tables underfill a VMEM tile (``row_buckets``
+    must then be multiples of the pack — ``host_schedule(packs=...)``
+    guarantees it).
+
+    Returns ``(C, nnz, sub_prod, accesses)``: the assembled CSR, the (M,)
+    per-row nnz (the caller's total_nnz source), the fallback rung's
+    sub-product total to verify against ``fallback_prod_capacity``, and
+    the summed table-transaction count (0 unless ``collect_accesses``).
+    """
+    _check_schedule(row_buckets, ladder, fallback_prod_capacity)
+    m, n = A.nrows, B.ncols
+    nnz_buf = jnp.zeros(m + 1, dtype=jnp.int32)
+    accesses = jnp.int32(0)
+    sub_prod = jnp.int32(0)
+    fallback = None
+    kept = []
+
+    if row_buckets[-1]:
+        # Global-memory-analog rung, fused form: one ESC expansion yields
+        # both the sub-result values AND (via its rpt) the per-row nnz.
+        rows, valid = _fallback_rows(binning, ladder, row_buckets[-1], m)
+        sub = gather_rows(A, rows, valid)
+        sub_prod = jnp.sum(
+            jnp.where(valid, nprod_of_rows(A, B, rows), 0)).astype(jnp.int32)
+        subC = esc.spgemm_fused(sub, B,
+                                prod_capacity=fallback_prod_capacity,
+                                nnz_capacity=fallback_prod_capacity)
+        cap = rows.shape[0]
+        sub_nnz = (subC.rpt[1:cap + 1] - subC.rpt[:cap]).astype(jnp.int32)
+        tgt = jnp.where(valid, rows, m + 1)
+        nnz_buf = nnz_buf.at[tgt].set(sub_nnz, mode="drop")
+        fallback = (subC, rows, valid)
+
+    for b in range(len(ladder.table_sizes) - 1, -1, -1):
+        rows_cap = row_buckets[b]
+        if not rows_cap:
+            continue
+        pack = ladder.rows_per_block[b] if row_packing else 1
+        pack = min(pack, rows_cap)         # both pow-2: stays divisible
+        rows, count = binning.rows_of_bin(b, rows_cap)
+        nnz_bin, col_tabs, val_tabs, acc_bin = fused_bin_call(
+            rows, count.reshape(1), A.rpt, A.col, A.val, B.rpt, B.col, B.val,
+            t_size=ladder.table_sizes[b], rows_cap=rows_cap, pack=pack,
+            single_access=single_access, interpret=interpret)
+        valid = jnp.arange(rows_cap, dtype=jnp.int32) < count
+        tgt = jnp.where(valid, rows, m + 1)
+        nnz_buf = nnz_buf.at[tgt].set(nnz_bin, mode="drop")
+        if collect_accesses:
+            accesses = accesses + jnp.sum(jnp.where(valid, acc_bin, 0))
+        kept.append((rows, count, col_tabs, val_tabs))
+
+    nnz = nnz_buf[:m]
+    rpt = exclusive_sum_in_place(nnz_buf)
+    c_col = jnp.zeros(nnz_capacity, jnp.int32)
+    c_val = jnp.zeros(nnz_capacity, A.val.dtype)
+    if fallback is not None:
+        subC, rows, valid = fallback
+        c_col, c_val = scatter_sub_rows(
+            subC, rows, valid, rpt, c_col, c_val, nnz_capacity=nnz_capacity)
+    for rows, count, col_tabs, val_tabs in kept:
+        c_col, c_val = numeric_epilogue(
+            col_tabs, val_tabs, rows, count, rpt, c_col, c_val,
+            nnz_capacity=nnz_capacity)
+
+    C = CSR(rpt=rpt, col=c_col, val=c_val, shape=(m, n))
+    return C, nnz, sub_prod, accesses
+
+
+def fused_binned(A: CSR, B: CSR, binning: Binning, ladder: BinLadder, *,
+                 nnz_capacity: int, single_access: bool = True,
+                 interpret: Optional[bool] = None, row_packing: bool = False,
+                 collect_accesses: bool = False):
+    """Host-orchestrated fused pipeline (cold / standalone path) -> CSR.
+
+    ``binning`` must be the n_prod binning on the SYMBOLIC ladder (the
+    fused kernel sizes each row's one table by n_prod).  Schedule
+    derivation as in ``symbolic_binned``, with pack-aligned buckets when
+    ``row_packing``.
+    """
+    packs = ladder.rows_per_block if row_packing else None
+    row_buckets, fall_cap = host_schedule(A, B, binning, ladder, packs=packs)
+    C, nnz, _, accesses = fused_scheduled(
+        A, B, binning, ladder, row_buckets=row_buckets,
+        nnz_capacity=nnz_capacity, fallback_prod_capacity=fall_cap,
+        single_access=single_access, interpret=interpret,
+        row_packing=row_packing, collect_accesses=collect_accesses)
     if collect_accesses:
         return C, accesses
     return C

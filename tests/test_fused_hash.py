@@ -1,0 +1,270 @@
+"""Fused symbolic->numeric hash kernels + multi-row VMEM packing (ISSUE 4).
+
+Covers the tentpole guarantees: the one-build fused pipeline is bitwise-
+identical to the two-pass oracle (nnz / structure / values, both probe
+disciplines), row packing is a pure layout change (bitwise parity across
+rung boundaries), fusion strictly reduces per-row table transactions
+(fused <= symbolic + numeric, measured not asserted), and the engine's
+fused steady state serves repeat shapes with zero retraces.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (SpgemmConfig, bin_rows_for_ladder, next_bucket,
+                        nprod_into_rpt, random_csr, esc)
+from repro.core.analysis import exclusive_sum_in_place
+from repro.core.binning_ranges import (make_ladder, numeric_ladder,
+                                       rows_per_block_of, symbolic_ladder)
+from repro.engine import SpgemmEngine, total_traces
+from repro.kernels import default_interpret, resolve_interpret, spgemm_hash
+
+
+def _pair(seed, m, k, n, da, db, dist="uniform"):
+    A = random_csr(jax.random.PRNGKey(seed), m, k, avg_nnz_per_row=da,
+                   distribution=dist)
+    B = random_csr(jax.random.PRNGKey(seed + 100), k, n, avg_nnz_per_row=db,
+                   distribution=dist)
+    return A, B
+
+
+def _two_pass(A, B, sym_lad, num_lad, single_access=True):
+    """The two-pass oracle: symbolic -> rpt -> numeric."""
+    m = A.nrows
+    nprod = nprod_into_rpt(A, B)[:m]
+    sym_bn = bin_rows_for_ladder(nprod, sym_lad)
+    nnz_buf = spgemm_hash.symbolic_binned(A, B, sym_bn, sym_lad,
+                                          single_access=single_access)
+    num_bn = bin_rows_for_ladder(nnz_buf[:m], num_lad)
+    cap = next_bucket(max(int(nnz_buf[:m].sum()), 1))
+    rpt = exclusive_sum_in_place(nnz_buf)
+    C = spgemm_hash.numeric_binned(A, B, rpt, num_bn, num_lad,
+                                   nnz_capacity=cap,
+                                   single_access=single_access)
+    return C, cap, sym_bn
+
+
+def _fused(A, B, sym_lad, cap, sym_bn, *, single_access=True, packed=False):
+    return spgemm_hash.fused_binned(A, B, sym_bn, sym_lad, nnz_capacity=cap,
+                                    single_access=single_access,
+                                    row_packing=packed)
+
+
+@pytest.mark.parametrize("single_access", [True, False])
+def test_fused_vs_two_pass_bitwise_parity(single_access):
+    """One table build must reproduce the double build EXACTLY: same nnz,
+    same sorted structure, bitwise-equal values (the per-column accumulation
+    order — A-entry major, B-entry minor — is identical in both kernels)."""
+    A, B = _pair(7, 72, 96, 80, 5.0, 4.0)
+    sym_lad, num_lad = symbolic_ladder(1.2), numeric_ladder(2.0)
+    C2, cap, sym_bn = _two_pass(A, B, sym_lad, num_lad, single_access)
+    C1 = _fused(A, B, sym_lad, cap, sym_bn, single_access=single_access)
+    nnz = int(C2.rpt[-1])
+    assert nnz > 0
+    np.testing.assert_array_equal(np.asarray(C1.rpt), np.asarray(C2.rpt))
+    np.testing.assert_array_equal(np.asarray(C1.col)[:nnz],
+                                  np.asarray(C2.col)[:nnz])
+    np.testing.assert_array_equal(np.asarray(C1.val)[:nnz],
+                                  np.asarray(C2.val)[:nnz])
+
+
+def test_fused_multi_rung_with_fallback_matches_oracle():
+    """Tiny ladders force several rungs AND the ESC fallback rung through
+    the fused path; nnz/structure stay exact against the dense oracle
+    (values allclose: ESC fallback rows may sum in a different order)."""
+    m = 96
+    A, B = _pair(9, m, 200, 150, 10.0, 8.0, dist="powerlaw")
+    sym_lad = make_ladder((32, 64, 128), 1.2, (32, 64, 128))
+    nprod = nprod_into_rpt(A, B)[:m]
+    sym_bn = bin_rows_for_ladder(nprod, sym_lad)
+    sizes = np.asarray(sym_bn.bin_size)
+    assert (sizes[:-1] > 0).sum() >= 2 and sizes[-1] > 0  # rungs + fallback
+    nnz_buf = esc.symbolic(A, B, prod_capacity=next_bucket(8192))
+    cap = next_bucket(int(nnz_buf.sum()))
+    C = spgemm_hash.fused_binned(A, B, sym_bn, sym_lad, nnz_capacity=cap)
+    ref = np.asarray(A.to_dense()) @ np.asarray(B.to_dense())
+    np.testing.assert_array_equal(
+        np.asarray(C.rpt[1:]) - np.asarray(C.rpt[:-1]),
+        (ref != 0).sum(axis=1))
+    np.testing.assert_allclose(np.asarray(C.to_dense()), ref,
+                               rtol=1e-5, atol=1e-5)
+    rptn, coln = np.asarray(C.rpt), np.asarray(C.col)
+    for i in range(m):
+        seg = coln[rptn[i]:rptn[i + 1]]
+        assert (np.diff(seg) > 0).all()    # rows sorted by column
+
+
+def test_packed_vs_unpacked_bitwise_parity_across_rungs():
+    """Row packing is a pure occupancy/layout change: sub-tables keep the
+    per-row table size, so probe sequences — and therefore nnz, structure,
+    values, and transaction counts — are bitwise-identical."""
+    m = 96
+    A, B = _pair(11, m, 160, 120, 8.0, 6.0, dist="powerlaw")
+    sym_lad = make_ladder((32, 64, 128, 256), 1.2, (32, 64, 128, 256))
+    assert sym_lad.rows_per_block[0] > 1     # packing actually engages
+    nprod = nprod_into_rpt(A, B)[:m]
+    sym_bn = bin_rows_for_ladder(nprod, sym_lad)
+    assert (np.asarray(sym_bn.bin_size)[:-1] > 0).sum() >= 2
+    cap = next_bucket(int(esc.symbolic(A, B,
+                                       prod_capacity=next_bucket(8192)).sum()))
+    Cu, acc_u = spgemm_hash.fused_binned(A, B, sym_bn, sym_lad,
+                                         nnz_capacity=cap, row_packing=False,
+                                         collect_accesses=True)
+    Cp, acc_p = spgemm_hash.fused_binned(A, B, sym_bn, sym_lad,
+                                         nnz_capacity=cap, row_packing=True,
+                                         collect_accesses=True)
+    np.testing.assert_array_equal(np.asarray(Cu.rpt), np.asarray(Cp.rpt))
+    np.testing.assert_array_equal(np.asarray(Cu.col), np.asarray(Cp.col))
+    np.testing.assert_array_equal(np.asarray(Cu.val), np.asarray(Cp.val))
+    assert int(acc_u) == int(acc_p)
+
+
+def test_packed_geometry_and_ladder_rows_per_block():
+    """Pack counts are pow-2, tile-bounded, and 1 once a table fills the
+    minimum (8, 128) int32 tile."""
+    assert rows_per_block_of(32) == 32
+    assert rows_per_block_of(512) == 2
+    assert rows_per_block_of(1024) == 1
+    assert rows_per_block_of(24576) == 1
+    lad = symbolic_ladder(1.2)
+    assert lad.rows_per_block == tuple(
+        rows_per_block_of(t) for t in lad.table_sizes)
+    for t, p in zip(lad.table_sizes, lad.rows_per_block):
+        t_rows, stride = spgemm_hash._packed_geom(t, p)
+        assert stride >= t and t_rows * 128 == p * stride
+
+
+def test_fused_accesses_leq_two_pass_per_row():
+    """Access-count regression (the Fig.-9 counters, per row): building the
+    table once must cost no more transactions than building it twice —
+    fused <= symbolic + numeric for EVERY row."""
+    m = 80
+    A, B = _pair(13, m, 100, 90, 6.0, 5.0)
+    sym_lad, num_lad = symbolic_ladder(1.2), numeric_ladder(2.0)
+    nprod = nprod_into_rpt(A, B)[:m]
+    sym_bn = bin_rows_for_ladder(nprod, sym_lad)
+    nnz_buf = spgemm_hash.symbolic_binned(A, B, sym_bn, sym_lad)
+    num_bn = bin_rows_for_ladder(nnz_buf[:m], num_lad)
+
+    def per_row_accesses(binning, ladder, call):
+        out = {}
+        sizes = np.asarray(binning.bin_size)
+        for b, t_size in enumerate(ladder.table_sizes):
+            if not sizes[b]:
+                continue
+            rows_cap = next_bucket(int(sizes[b]), minimum=8)
+            rows, count = binning.rows_of_bin(b, rows_cap)
+            acc = call(rows, count.reshape(1), t_size, rows_cap)
+            rr, aa = np.asarray(rows), np.asarray(acc)
+            for i in range(int(sizes[b])):
+                out[int(rr[i])] = int(aa[i])
+        return out
+
+    sym_acc = per_row_accesses(
+        sym_bn, sym_lad,
+        lambda rows, cnt, t, cap: spgemm_hash.symbolic_bin_call(
+            rows, cnt, A.rpt, A.col, B.rpt, B.col,
+            t_size=t, rows_cap=cap, single_access=True)[1])
+    num_acc = per_row_accesses(
+        num_bn, num_lad,
+        lambda rows, cnt, t, cap: spgemm_hash.numeric_bin_call(
+            rows, cnt, A.rpt, A.col, A.val, B.rpt, B.col, B.val,
+            t_size=t, rows_cap=cap, single_access=True)[2])
+    fused_acc = per_row_accesses(
+        sym_bn, sym_lad,
+        lambda rows, cnt, t, cap: spgemm_hash.fused_bin_call(
+            rows, cnt, A.rpt, A.col, A.val, B.rpt, B.col, B.val,
+            t_size=t, rows_cap=cap, single_access=True)[3])
+
+    assert set(fused_acc) == set(sym_acc)
+    checked = 0
+    for r, f in fused_acc.items():
+        if r in num_acc:               # row served by kernels in both phases
+            assert f <= sym_acc[r] + num_acc[r], r
+            checked += 1
+    assert checked >= m // 2
+    total_two = sum(sym_acc.values()) + sum(num_acc.values())
+    total_fused = sum(fused_acc.values())
+    assert total_fused * 3 <= total_two * 2    # >= 1.5x reduction overall
+
+
+def test_host_schedule_pack_alignment():
+    """``host_schedule(packs=...)`` floors populated rungs at their pack
+    so packed kernels always get whole grid steps."""
+    m = 96
+    A, B = _pair(17, m, 160, 120, 8.0, 6.0, dist="powerlaw")
+    lad = make_ladder((32, 64, 128), 1.2, (32, 64, 128))
+    bn = bin_rows_for_ladder(nprod_into_rpt(A, B)[:m], lad)
+    buckets, _ = spgemm_hash.host_schedule(A, B, bn, lad,
+                                           packs=lad.rows_per_block)
+    sizes = np.asarray(bn.bin_size)
+    for b, (s, cap) in enumerate(zip(sizes[:-1], buckets[:-1])):
+        if not s:
+            assert cap == 0
+            continue
+        pack = lad.rows_per_block[b]
+        assert cap >= max(int(s), pack) and cap % pack == 0
+
+
+@pytest.mark.parametrize("row_packing", [False, True])
+def test_engine_fused_steady_state_zero_retraces(row_packing):
+    """The fused executable serves repeat shapes with zero retraces and
+    stays bitwise-identical to the two-pass engine path."""
+    cfg = SpgemmConfig(method="hash", fuse_numeric=True,
+                       row_packing=row_packing)
+    engine = SpgemmEngine(cfg)
+    oracle = SpgemmEngine(SpgemmConfig(method="hash"))
+    pairs = [_pair(31 + s, 48, 64, 56, 4.0, 3.0) for s in range(5)]
+    cap_a = next_bucket(max(A.capacity for A, _ in pairs))
+    cap_b = next_bucket(max(B.capacity for _, B in pairs))
+    pairs = [(A.with_capacity(cap_a), B.with_capacity(cap_b))
+             for A, B in pairs]
+
+    baseline = None
+    for i, (A, B) in enumerate(pairs):
+        res = engine.execute(A, B)
+        ref = oracle.execute(A, B)
+        nnz = ref.total_nnz
+        assert res.total_nnz == nnz
+        # Steady-state fused results keep the cold-call telemetry shape.
+        assert res.sym_binning is not None and res.num_binning is not None
+        np.testing.assert_array_equal(np.asarray(res.C.rpt),
+                                      np.asarray(ref.C.rpt))
+        np.testing.assert_array_equal(np.asarray(res.C.col)[:nnz],
+                                      np.asarray(ref.C.col)[:nnz])
+        np.testing.assert_array_equal(np.asarray(res.C.val)[:nnz],
+                                      np.asarray(ref.C.val)[:nnz])
+        if i == 1:
+            baseline = total_traces()   # cold + first fused/oracle traces
+    assert total_traces() == baseline   # zero retraces on the tail
+    entry = next(e for _, e in engine.cache.items())
+    assert entry.stats.hot_calls >= 3
+    assert entry.plan.config.fuse_numeric
+
+
+def test_engine_fused_overflow_grows_and_recovers():
+    """A same-signature request outgrowing the fused plan's schedule must
+    fall back to the steps oracle, grow the plan, and stay correct."""
+    cfg = SpgemmConfig(method="hash", fuse_numeric=True, row_packing=True)
+    engine = SpgemmEngine(cfg)
+    small = _pair(41, 64, 96, 72, 2.0, 2.0)
+    big = _pair(43, 64, 96, 72, 12.0, 9.0, dist="powerlaw")
+    cap_a = next_bucket(max(small[0].capacity, big[0].capacity))
+    cap_b = next_bucket(max(small[1].capacity, big[1].capacity))
+    for A, B in (small, big, small):
+        A, B = A.with_capacity(cap_a), B.with_capacity(cap_b)
+        res = engine.execute(A, B)
+        ref = np.asarray(A.to_dense()) @ np.asarray(B.to_dense())
+        np.testing.assert_allclose(np.asarray(res.C.to_dense()), ref,
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_interpret_auto_detect():
+    """interpret=None resolves per-backend (interpreted off-TPU), and the
+    config default no longer hardwires interpret mode."""
+    assert SpgemmConfig().interpret is None
+    assert resolve_interpret(None) == default_interpret()
+    assert default_interpret() == (jax.default_backend() != "tpu")
+    assert resolve_interpret(True) is True
+    assert resolve_interpret(False) is False
