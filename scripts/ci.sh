@@ -17,6 +17,10 @@ echo "== engine smoke benchmark (hash method: zero-retrace steady state) =="
 python benchmarks/bench_engine.py --smoke --method hash
 
 echo
+echo "== engine smoke benchmark (adaptive policy: auto shards + tracked headroom) =="
+python benchmarks/bench_engine.py --smoke --method hash --adaptive
+
+echo
 echo "== engine smoke benchmark (fused hash: one-build tables + row packing) =="
 python benchmarks/bench_engine.py --smoke --method hash --fused
 

@@ -22,7 +22,7 @@ cudaMalloc/exec overlap) — same results, no re-tracing.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict, Optional, Union
 
 import jax
 
@@ -30,6 +30,13 @@ from .binning import Binning
 from .binning_ranges import BinLadder, numeric_ladder, symbolic_ladder
 from .csr import CSR
 from .workspace import next_bucket  # canonical home (re-exported for API compat)
+
+
+# ``SpgemmConfig.shards`` sentinel: let the engine's adaptive policy pick
+# the shard count from stream telemetry (``repro.engine.autotune``)
+# instead of a static knob.  0 (not None) keeps the config JSON-trivially
+# serializable and totally ordered for cache keys.
+AUTO_SHARDS = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,14 +47,18 @@ class SpgemmConfig:
     vmem_extended: bool = False      # TPU ladder extension (DESIGN.md §5)
     hash_single_access: bool = True  # §5.2 single-access vs multi-access
     fuse_esc: bool = False           # beyond-paper single-expansion ESC
-    fuse_numeric: bool = False       # hash: one-build symbolic->numeric fusion
+    # Hash default since the fusion soaked (ISSUE 4 -> 5): one table build
+    # per row.  The two-pass form remains the cold-path / parity oracle
+    # and the automatic fallback whenever ``admits_fused`` fails.
+    fuse_numeric: bool = True        # hash: one-build symbolic->numeric fusion
     row_packing: bool = False        # hash: pack small rows per VMEM tile
     # Pallas interpret mode: None = auto-detect (interpret everywhere but a
     # real TPU backend, so the same code runs compiled on hardware without
     # callers threading the flag; see repro.kernels.resolve_interpret).
     interpret: Optional[bool] = None
     timing: bool = False             # per-step wall-clock (benchmarks)
-    shards: int = 1                  # row-block shards of A (engine fan-out)
+    shards: int = 1                  # row-block shards of A (engine fan-out;
+                                     # AUTO_SHARDS = telemetry-chosen)
 
     def ladders(self) -> tuple[BinLadder, BinLadder]:
         return (symbolic_ladder(self.sym_multiplier, vmem_extended=self.vmem_extended),
@@ -69,7 +80,7 @@ class SpgemmResult:
 
 
 def spgemm(A: CSR, B: CSR, config: SpgemmConfig = SpgemmConfig(), *,
-           shards: Optional[int] = None) -> SpgemmResult:
+           shards: Union[int, str, None] = None) -> SpgemmResult:
     """C = A · B in CSR, two-phase, binned, statically bucketed.
 
     Executed through the shared :class:`repro.engine.SpgemmEngine`: the
@@ -79,10 +90,13 @@ def spgemm(A: CSR, B: CSR, config: SpgemmConfig = SpgemmConfig(), *,
     ``shards=N`` partitions A into N flop-balanced row blocks and fans
     the product out into per-shard sub-dispatches (one plan, N shards);
     results are merged back into one CSR with identical nnz/structure.
+    ``shards="auto"`` (or ``AUTO_SHARDS``) lets the engine's adaptive
+    policy pick N per plan from observed flop totals instead.
     """
     assert A.ncols == B.nrows, (A.shape, B.shape)
     if shards is not None:
-        config = dataclasses.replace(config, shards=int(shards))
+        shards = AUTO_SHARDS if shards == "auto" else int(shards)
+        config = dataclasses.replace(config, shards=shards)
     # Imported lazily: core is the engine's substrate, so the dependency
     # points engine -> core at module-load time and core -> engine only here.
     from repro.engine.executor import default_engine

@@ -5,6 +5,9 @@ API and the serving/analytics front-ends:
 
   plan.py      — immutable :class:`SpgemmPlan` over operand signatures
                  (everything derivable before data arrives).
+  autotune.py  — :class:`AdaptivePolicy` / :class:`PolicyState`:
+                 telemetry-driven shard-count selection (AUTO_SHARDS)
+                 and tracked-jitter hash-schedule headroom.
   partition.py — :class:`ShardSpec` row-block partitioning (flop-balanced
                  bounds, pow-2 shard buckets) + mesh placement helpers.
   cache.py     — LRU :class:`PlanCache` of plans + jitted executables
@@ -25,18 +28,25 @@ Lifecycle::
                  fan out into per-shard sub-dispatches (ordinary plans on
                  the slice signatures) and a jitted merge concatenation.
 """
+from repro.core.spgemm import AUTO_SHARDS
+
+from .autotune import (AdaptivePolicy, PolicyState, choose_shards,
+                       revise_shards, trim_schedule)
 from .cache import CacheEntry, PlanCache
 from .executor import (SpgemmEngine, SpgemmRequest, StepTimer,
                        default_engine, reset_default_engine)
-from .partition import ShardSpec, balanced_bounds, plan_shards, shard_devices
+from .partition import (ShardSpec, balanced_bounds, clamp_shards,
+                        plan_shards, shard_devices)
 from .plan import (HashSchedule, MatrixSig, PlanKey, SpgemmPlan, plan,
                    plan_key)
 from .stats import EngineStats, PlanStats, render, total_traces, traces_for
 
 __all__ = [
+    "AUTO_SHARDS", "AdaptivePolicy", "PolicyState", "choose_shards",
+    "revise_shards", "trim_schedule",
     "CacheEntry", "PlanCache", "SpgemmEngine", "SpgemmRequest", "StepTimer",
     "default_engine", "reset_default_engine", "ShardSpec", "balanced_bounds",
-    "plan_shards", "shard_devices", "HashSchedule", "MatrixSig",
-    "PlanKey", "SpgemmPlan", "plan", "plan_key", "EngineStats", "PlanStats",
-    "render", "total_traces", "traces_for",
+    "clamp_shards", "plan_shards", "shard_devices", "HashSchedule",
+    "MatrixSig", "PlanKey", "SpgemmPlan", "plan", "plan_key", "EngineStats",
+    "PlanStats", "render", "total_traces", "traces_for",
 ]

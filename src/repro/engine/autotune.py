@@ -1,0 +1,314 @@
+"""Telemetry-driven adaptive execution policy (OpSparse §4.3, taken live).
+
+The paper's central tuning claim is that the binning/hashing *policy* —
+how much headroom, which bins run, how work is split — trades hash-
+collision rate against hardware utilization and must be matched to the
+workload (§4.3, §5.6); spECK makes the same point with per-matrix
+lightweight statistics.  The engine's two remaining fixed policies were
+exactly the ROADMAP's open items:
+
+  * the static ``shards=`` knob — every request fans out into the same N
+    row blocks no matter how small the product is, even though the merge
+    finalizer dominates tiny products;
+  * the fixed 2x hash-schedule headroom — stable streams keep paying the
+    padded (masked) grid steps the headroom bought them on day one.
+
+This module replaces both with state *learned from the telemetry the
+engine already collects in its one finalize sync*:
+
+:class:`AdaptivePolicy`
+    The engine-level knobs (hysteresis thresholds, headroom bounds,
+    shard sizing).  Immutable; one per engine.
+
+:class:`PolicyState`
+    The per-plan learned state, carried on :class:`~repro.engine.plan.
+    SpgemmPlan` and serialized by ``PlanCache.dump/load``: the current
+    headroom, the eviction-free streak, observed per-rung bin-size
+    maxima, and the shard-count decision with the flop basis it was made
+    from.  All counters are HOST-side Python ints — the device scalars
+    they accumulate are int32 and a near-2^31 flop stream would wrap any
+    fixed-width accumulator (the same guard ``core/analysis.row_flops``
+    applies to its ``2 * nprod`` weights).
+
+The headroom policy is the §5.1/§5.6 memory-vs-retrace trade-off made
+dynamic: an overflow retrace doubles the headroom for the rebuild (the
+stream jitters more than the schedule allowed), while a sustained
+eviction-free streak re-derives the schedule from the *observed* bin
+maxima at a shrunken headroom and swaps it in (one deliberate retrace)
+iff that actually removes padded grid steps.  At most one trim fires per
+overflow epoch, so a stable stream settles instead of oscillating.
+
+The shard policy picks N so every shard carries enough flops to amortize
+the merge finalizer, bounded by device occupancy (the data-axis device
+count); a stream whose observed mean flops drifts outside a hysteresis
+band around the decision basis is re-decided — shrinking to N=1 for tiny
+products where merge overhead dominates.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+from repro.core.binning_ranges import BinLadder
+from repro.core.workspace import next_bucket
+from repro.kernels.spgemm_hash import (_ROW_BUCKET_MIN,
+                                       fallback_capacity_bucket,
+                                       schedule_bucket)
+
+from .partition import clamp_shards
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptivePolicy:
+    """Engine-level adaptive-policy knobs (one per engine, immutable).
+
+    headroom_*      bounds and step sizes for the hash-schedule headroom:
+                    ``init`` seeds fresh plans (the old fixed 2x),
+                    ``grow`` multiplies on overflow (capped at ``max``),
+                    ``shrink`` multiplies on a trim (floored at ``min`` —
+                    the capacity-margin floor, below which pow-2 rounding
+                    provides all remaining slack).
+    trim_streak     eviction-free hot finalizes before a trim attempt.
+    min_shard_flops flops one shard must carry to amortize the merge
+                    finalizer (below it, fewer/zero shards).
+    max_shards      hard cap on the learned shard count (``None`` = the
+                    data-axis device count — per-shard occupancy).
+    revise_period   finalized requests between shard-count reviews.
+    revise_factor   hysteresis band: the observed mean must leave
+                    ``[basis/f, basis*f]`` before N is re-decided.
+    """
+
+    headroom_init: float = 2.0
+    headroom_min: float = 1.25
+    headroom_max: float = 4.0
+    headroom_grow: float = 2.0
+    headroom_shrink: float = 0.75
+    trim_streak: int = 16
+    min_shard_flops: int = 1 << 21
+    max_shards: Optional[int] = None
+    revise_period: int = 8
+    revise_factor: float = 4.0
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyState:
+    """Per-plan learned policy state (lives on ``SpgemmPlan.policy``).
+
+    Bin-size maxima are observed over the CURRENT eviction-free streak
+    (reset on overflow and after a trim attempt), so a trim re-derives
+    from what the stream does *now*, not what it did before the last
+    regime change.  Flop telemetry windows between shard reviews.  Every
+    field is a host Python int/float — JSON-serializable and wrap-proof.
+    """
+
+    headroom: float = 2.0
+    streak: int = 0
+    trimmed: bool = False        # one trim per overflow epoch (hysteresis)
+    sym_max: Optional[Tuple[int, ...]] = None
+    num_max: Optional[Tuple[int, ...]] = None
+    sym_fall_max: int = 0
+    num_fall_max: int = 0
+    flops_total: int = 0         # window accumulator (host int64 semantics)
+    flops_calls: int = 0
+    shard_decision: Optional[int] = None
+    shard_basis: int = 0         # mean flops the decision was made from
+
+    # -- hash-schedule jitter tracking --------------------------------------
+    def note_admit(self, sym_sizes: Sequence[int], sym_fall: int,
+                   num_sizes: Optional[Sequence[int]] = None,
+                   num_fall: int = 0) -> "PolicyState":
+        """Fold one admitted (eviction-free) hot finalize's observed bin
+        metadata into the streak maxima.  Inputs may be device int32
+        scalars; everything is widened to Python int on entry."""
+        sym = tuple(int(s) for s in sym_sizes)
+        if self.sym_max is not None and len(self.sym_max) == len(sym):
+            sym = tuple(max(a, b) for a, b in zip(self.sym_max, sym))
+        num = self.num_max
+        if num_sizes is not None:
+            num = tuple(int(s) for s in num_sizes)
+            if self.num_max is not None and len(self.num_max) == len(num):
+                num = tuple(max(a, b) for a, b in zip(self.num_max, num))
+        return dataclasses.replace(
+            self, streak=self.streak + 1, sym_max=sym, num_max=num,
+            sym_fall_max=max(self.sym_fall_max, int(sym_fall)),
+            num_fall_max=max(self.num_fall_max, int(num_fall)))
+
+    def note_overflow(self, policy: AdaptivePolicy) -> "PolicyState":
+        """Overflow retrace: the stream jitters beyond the schedule — grow
+        the headroom for the rebuild, restart the streak, re-arm trims."""
+        return dataclasses.replace(
+            self, headroom=min(self.headroom * policy.headroom_grow,
+                               policy.headroom_max),
+            streak=0, trimmed=False, sym_max=None, num_max=None,
+            sym_fall_max=0, num_fall_max=0)
+
+    def after_trim(self, policy: AdaptivePolicy) -> "PolicyState":
+        """Post-trim-attempt state: shrunken headroom, fresh streak, and
+        no further trims until an overflow opens a new epoch."""
+        return dataclasses.replace(
+            self, headroom=self.trim_headroom(policy), streak=0,
+            trimmed=True, sym_max=None, num_max=None,
+            sym_fall_max=0, num_fall_max=0)
+
+    def trim_headroom(self, policy: AdaptivePolicy) -> float:
+        """The headroom a trim re-derives with (one shrink step down)."""
+        return max(policy.headroom_min,
+                   self.headroom * policy.headroom_shrink)
+
+    def wants_trim(self, policy: AdaptivePolicy) -> bool:
+        return (not self.trimmed and self.sym_max is not None
+                and self.streak >= policy.trim_streak)
+
+    # -- shard-count telemetry ----------------------------------------------
+    def note_flops(self, flops: int) -> "PolicyState":
+        """Accumulate one finalized request's flop estimate (host int)."""
+        return dataclasses.replace(
+            self, flops_total=self.flops_total + int(flops),
+            flops_calls=self.flops_calls + 1)
+
+    @property
+    def mean_flops(self) -> int:
+        return self.flops_total // max(self.flops_calls, 1)
+
+    def with_shard_decision(self, n: int, basis: int) -> "PolicyState":
+        return dataclasses.replace(
+            self, shard_decision=int(n), shard_basis=int(basis),
+            flops_total=0, flops_calls=0)
+
+    # -- persistence merge ---------------------------------------------------
+    def union(self, other: "PolicyState") -> "PolicyState":
+        """Monotone merge for cross-process cache loads: keep the larger
+        observed maxima and the more conservative (larger) headroom; an
+        identical pair merges to itself, so no-op loads stay no-ops."""
+        def tmax(a, b):
+            if a is None:
+                return b
+            if b is None or len(a) != len(b):
+                return a
+            return tuple(max(x, y) for x, y in zip(a, b))
+        return PolicyState(
+            headroom=max(self.headroom, other.headroom),
+            streak=max(self.streak, other.streak),
+            trimmed=self.trimmed and other.trimmed,
+            sym_max=tmax(self.sym_max, other.sym_max),
+            num_max=tmax(self.num_max, other.num_max),
+            sym_fall_max=max(self.sym_fall_max, other.sym_fall_max),
+            num_fall_max=max(self.num_fall_max, other.num_fall_max),
+            flops_total=max(self.flops_total, other.flops_total),
+            flops_calls=max(self.flops_calls, other.flops_calls),
+            shard_decision=(self.shard_decision
+                            if self.shard_decision is not None
+                            else other.shard_decision),
+            shard_basis=max(self.shard_basis, other.shard_basis),
+        )
+
+
+# ---------------------------------------------------------------------------
+# Shard-count selection.
+# ---------------------------------------------------------------------------
+
+def choose_shards(total_flops: int, nrows: int, devices: int,
+                  policy: AdaptivePolicy) -> int:
+    """Shard count from a flop estimate and the device occupancy bound.
+
+    Each shard must carry ``min_shard_flops`` to amortize the jitted
+    merge finalizer (per-shard verify syncs + device concatenation), and
+    there is no point fanning wider than the devices that could run the
+    shards concurrently — so tiny products collapse to N=1 (unsharded:
+    no merge at all) and large ones saturate the mesh.  All math is host
+    Python int: a multi-billion-flop stream must not wrap.
+    """
+    limit = (int(policy.max_shards) if policy.max_shards is not None
+             else max(int(devices), 1))
+    n = min(limit, int(total_flops) // max(int(policy.min_shard_flops), 1))
+    return clamp_shards(nrows, n)
+
+
+def revise_shards(state: PolicyState, nrows: int, devices: int,
+                  policy: AdaptivePolicy) -> Tuple[PolicyState, bool]:
+    """Periodic shard-count review over the telemetry window.
+
+    Every ``revise_period`` finalized requests, re-decide N from the
+    window's mean flops — but only when the mean has left the hysteresis
+    band around the decision basis, so a stream hovering near a sizing
+    boundary doesn't flap plans (each flip costs a cold call).  Returns
+    ``(state, revised)``; the window resets either way.
+    """
+    if state.shard_decision is None or state.flops_calls < policy.revise_period:
+        return state, False
+    mean = state.mean_flops
+    basis = max(state.shard_basis, 1)
+    state = dataclasses.replace(state, flops_total=0, flops_calls=0)
+    if (mean * policy.revise_factor >= basis
+            and mean <= basis * policy.revise_factor):
+        return state, False                  # within the hysteresis band
+    n = choose_shards(mean, nrows, devices, policy)
+    if n == state.shard_decision:
+        return dataclasses.replace(state, shard_basis=mean), False
+    return state.with_shard_decision(n, mean), True
+
+
+# ---------------------------------------------------------------------------
+# Hash-schedule trimming.
+# ---------------------------------------------------------------------------
+
+def trim_buckets(maxima: Tuple[int, ...], current: Tuple[int, ...],
+                 m: int, headroom: float,
+                 packs: Optional[Tuple[int, ...]] = None) -> Tuple[int, ...]:
+    """Re-derive one ladder's bin-count buckets from observed maxima.
+
+    Mirrors ``spgemm_hash.host_schedule`` bit-for-bit (the shared
+    :func:`~repro.kernels.spgemm_hash.schedule_bucket`), then takes the
+    elementwise min with the current schedule — a trim only ever
+    shrinks; rungs the streak never populated drop to 0 (statically
+    absent, the biggest padding win).
+    """
+    m_cap = next_bucket(int(m), minimum=_ROW_BUCKET_MIN)
+    return tuple(
+        min(cur, schedule_bucket(
+            s, m_cap=m_cap, headroom=headroom,
+            pack=(packs[b] if packs is not None and b < len(packs) else 1)))
+        for b, (s, cur) in enumerate(zip(maxima, current)))
+
+
+def trim_fallback(fall_max: int, current: int, headroom: float,
+                  rows_bucket: int) -> int:
+    """Trimmed fallback-expansion capacity (0 when the rung dropped)."""
+    if not rows_bucket or not int(fall_max):
+        return 0 if not rows_bucket else current
+    return min(current, fallback_capacity_bucket(fall_max,
+                                                 headroom=headroom))
+
+
+def trim_schedule(state: PolicyState, current, *, m: int,
+                  sym_ladder: BinLadder, packed: bool, fused: bool,
+                  policy: AdaptivePolicy):
+    """Derive the trimmed :class:`HashSchedule` fields from a streak's
+    observed maxima, or ``None`` when trimming would change nothing.
+
+    Returns ``(sym_buckets, num_buckets, sym_fall, num_fall)`` tuples
+    ready for ``HashSchedule`` — the caller owns the dataclass to keep
+    this module import-light (plan.py imports us for ``PolicyState``).
+    Fused plans observe (and trim) only the symbolic side — there is no
+    numeric probe pass — so their numeric buckets ride along unchanged.
+    """
+    if state.sym_max is None:
+        return None
+    headroom = state.trim_headroom(policy)
+    packs = sym_ladder.rows_per_block if (fused and packed) else None
+    sym = trim_buckets(state.sym_max, current.sym_row_buckets, m, headroom,
+                       packs)
+    sym_fall = trim_fallback(state.sym_fall_max, current.sym_fall_prod_bucket,
+                             headroom, sym[-1])
+    num = current.num_row_buckets
+    num_fall = current.num_fall_prod_bucket
+    if not fused and state.num_max is not None:
+        num = trim_buckets(state.num_max, num, m, headroom)
+        num_fall = trim_fallback(state.num_fall_max, num_fall, headroom,
+                                 num[-1])
+    if (sym == tuple(current.sym_row_buckets)
+            and num == tuple(current.num_row_buckets)
+            and sym_fall == current.sym_fall_prod_bucket
+            and num_fall == current.num_fall_prod_bucket):
+        return None
+    return sym, num, sym_fall, num_fall

@@ -19,13 +19,21 @@ from collections import OrderedDict
 from typing import Callable, Iterable, Optional, Tuple
 
 from repro.core.spgemm import SpgemmConfig
+from repro.core.workspace import next_bucket
 
+from .autotune import PolicyState
 from .partition import ShardSpec
 from .plan import HashSchedule, MatrixSig, PlanKey, SpgemmPlan
 from .plan import plan as make_plan
 from .stats import PlanStats
 
-_DUMP_VERSION = 1
+# v1: pre-adaptive-policy payloads (no ``policy`` blob; hash schedules may
+# predate row packing / fusion, so their sym buckets were never
+# pack-aligned).  v2 adds the policy blob.  ``load`` accepts both and
+# re-derives pack alignment for fused+packed plans either way — see
+# ``_align_schedule_for_packing``.
+_DUMP_VERSION = 2
+_LOADABLE_VERSIONS = (1, 2)
 
 
 @dataclasses.dataclass
@@ -83,6 +91,14 @@ class PlanCache:
             entry.plan = plan
             entry.executable = None
 
+    def update_policy(self, entry: CacheEntry, state: "PolicyState") -> None:
+        """Swap in updated adaptive-policy state WITHOUT dropping the
+        executable: policy fields never enter a trace (no static shape
+        reads them), so the compiled steady state stays valid — this is
+        what lets the engine fold telemetry in on every hot finalize."""
+        with self._lock:
+            entry.plan = entry.plan.with_policy(state)
+
     # -- persistence --------------------------------------------------------
     def dump(self, path: str) -> int:
         """Serialize every cached plan's learned state to JSON.
@@ -107,14 +123,24 @@ class PlanCache:
         """Prewarm the cache from a :meth:`dump` file (cross-process
         plan-cache).  Loaded plans merge monotonically into any existing
         same-signature entries (buckets/schedules/specs only grow).
-        Returns the number of plans loaded."""
+
+        Accepts any version in ``_LOADABLE_VERSIONS``: v1 payloads (and
+        hand-edited ones) may carry hash schedules learned before row
+        packing / fusion landed, whose sym buckets were never aligned to
+        ``rows_per_block`` — such a schedule would satisfy ``admits_fused``
+        (the sizes fit) yet hand the fused kernels a sub-pack geometry the
+        packed grid can't be carved from, so every loaded plan's schedule
+        is re-aligned (pow-2 sanitized + pack-floored, monotone: buckets
+        only grow) before it enters the cache.  Returns the number of
+        plans loaded."""
         with open(path) as f:
             payload = json.load(f)
-        if payload.get("version") != _DUMP_VERSION:
+        if payload.get("version") not in _LOADABLE_VERSIONS:
             raise ValueError(
-                f"plan-cache dump version {payload.get('version')!r} != "
-                f"{_DUMP_VERSION}")
-        plans = [_plan_from_json(blob) for blob in payload["plans"]]
+                f"plan-cache dump version {payload.get('version')!r} not in "
+                f"{_LOADABLE_VERSIONS}")
+        plans = [_align_schedule_for_packing(_plan_from_json(blob))
+                 for blob in payload["plans"]]
         # One critical section for the whole merge: a concurrent
         # overflow-grow must not interleave between our read of an
         # entry's plan and the write-back (lost update would shrink it).
@@ -139,12 +165,20 @@ class PlanCache:
                             if merged.shard_spec is not None
                             else plan.shard_spec)
                     merged = merged.with_shard_spec(spec)
+                if plan.policy is not None:
+                    state = (merged.policy.union(plan.policy)
+                             if merged.policy is not None else plan.policy)
+                    merged = merged.with_policy(state)
                 # A no-op merge must NOT drop the live executable: a warm
                 # engine loading an equal-or-smaller dump keeps its
-                # zero-retrace steady state.
+                # zero-retrace steady state.  Policy state never enters a
+                # trace, so a policy-only difference keeps it too.
                 if merged != existing.plan:
+                    policy_only = (merged.with_policy(existing.plan.policy)
+                                   == existing.plan)
                     existing.plan = merged
-                    existing.executable = None
+                    if not policy_only:
+                        existing.executable = None
         return len(plans)
 
     # -- introspection ------------------------------------------------------
@@ -181,6 +215,8 @@ def _plan_to_json(p: SpgemmPlan) -> dict:
                           if p.hash_schedule is not None else None),
         "shard_spec": (dataclasses.asdict(p.shard_spec)
                        if p.shard_spec is not None else None),
+        "policy": (dataclasses.asdict(p.policy)
+                   if p.policy is not None else None),
     }
     return blob
 
@@ -203,4 +239,49 @@ def _plan_from_json(blob: dict) -> SpgemmPlan:
             bounds=tuple(ss["bounds"]),
             row_buckets=tuple(ss["row_buckets"]),
             cap_buckets=tuple(ss["cap_buckets"])))
+    pol = blob.get("policy")            # absent from v1 dumps
+    if pol is not None:
+        for key in ("sym_max", "num_max"):
+            if pol.get(key) is not None:
+                pol[key] = tuple(pol[key])   # JSON lists -> hashable state
+        plan = plan.with_policy(PolicyState(**pol))
     return plan
+
+
+def _align_schedule_for_packing(plan: SpgemmPlan) -> SpgemmPlan:
+    """Re-derive pack alignment for a LOADED plan's hash schedule.
+
+    A schedule persisted before row packing / fusion landed (v1 dumps) —
+    or hand-edited JSON — can hold sym buckets that are not pow-2, or
+    smaller than a rung's ``rows_per_block``; ``admits_fused`` would
+    still pass (the observed sizes fit) while the fused packed kernels
+    require pow-2 buckets carved into whole ``pack``-row grid steps.
+    Alignment is monotone (buckets only grow), so every previously-
+    admitted request stays admitted.
+    """
+    sched = plan.hash_schedule
+    if sched is None or plan.config.method != "hash":
+        return plan
+    packs = plan.sym_ladder.rows_per_block
+    fused_packed = plan.config.fuse_numeric and plan.config.row_packing
+
+    def aligned(buckets, rung_packs):
+        out = []
+        for b, cap in enumerate(buckets):
+            if cap:
+                lo = (rung_packs[b]
+                      if rung_packs is not None and b < len(rung_packs)
+                      else 1)
+                cap = next_bucket(int(cap), minimum=max(int(lo), 1))
+            out.append(int(cap))
+        return tuple(out)
+
+    aligned_sched = HashSchedule(
+        sym_row_buckets=aligned(sched.sym_row_buckets,
+                                packs if fused_packed else None),
+        num_row_buckets=aligned(sched.num_row_buckets, None),
+        sym_fall_prod_bucket=sched.sym_fall_prod_bucket,
+        num_fall_prod_bucket=sched.num_fall_prod_bucket)
+    if aligned_sched == sched:
+        return plan
+    return plan.with_hash_schedule(aligned_sched)

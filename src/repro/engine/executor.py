@@ -50,22 +50,19 @@ from repro.core.analysis import (exclusive_sum_in_place, nprod_into_rpt,
                                  row_flops)
 from repro.core.binning import bin_rows, bin_rows_for_ladder
 from repro.core.csr import CSR
-from repro.core.spgemm import SpgemmConfig, SpgemmResult, next_bucket
+from repro.core.spgemm import (AUTO_SHARDS, SpgemmConfig, SpgemmResult,
+                               next_bucket)
 from repro.kernels import spgemm_hash
+from repro.launch.mesh import data_axis_devices
 
-from . import stats as stats_mod
+from . import autotune, stats as stats_mod
+from .autotune import AdaptivePolicy, PolicyState
 from .cache import CacheEntry, PlanCache
 from .partition import ShardSpec, plan_shards, shard_devices
 from .plan import HashSchedule, MatrixSig, SpgemmPlan, plan as make_plan
 from .stats import EngineStats
 
 _exclusive_sum = jax.jit(exclusive_sum_in_place, donate_argnums=0)
-
-# Learned bin-count buckets carry headroom over the observed counts so
-# steady-state bin-size jitter stays inside the schedule: padding rows are
-# masked grid steps, far cheaper than the steps-redo + recompile an
-# overflow costs (the §5.1/§5.6 memory-vs-retrace trade-off).
-_SCHEDULE_HEADROOM = 2.0
 
 # Capacity buckets (product expansion / C storage) get a smaller margin:
 # it only moves the learned pow-2 bucket when the observed total sits in
@@ -108,7 +105,7 @@ def _floor_schedule(row_buckets, fall_cap, plan_buckets, plan_fall):
 
 
 def _execute_steps(A: CSR, B: CSR, plan: SpgemmPlan,
-                   timer: StepTimer):
+                   timer: StepTimer, *, headroom: float = 2.0):
     """Cold / timing path.  Returns (result, prod_cap, nnz_cap, hash_sched).
 
     Identical math to the pre-engine ``core.spgemm`` flow, except the
@@ -118,6 +115,14 @@ def _execute_steps(A: CSR, B: CSR, plan: SpgemmPlan,
     with headroom, floored at the plan's), runs the schedule-driven
     kernels with it, and the combined :class:`HashSchedule` is returned
     for the caller to specialize the plan with (``None`` for ESC).
+
+    ``headroom`` over-provisions the learned bin-count buckets so
+    steady-state bin-size jitter stays inside the schedule: padding rows
+    are masked grid steps, far cheaper than the steps-redo + recompile an
+    overflow costs (the §5.1/§5.6 memory-vs-retrace trade-off).  It is no
+    longer a fixed 2x: the engine passes the plan's adaptive-policy value
+    (``engine/autotune``) — grown after overflows, shrunk on stable
+    streams.
     """
     config = plan.config
     m = A.nrows
@@ -148,7 +153,7 @@ def _execute_steps(A: CSR, B: CSR, plan: SpgemmPlan,
                      if config.fuse_numeric and config.row_packing else None)
         sym_buckets, sym_fall = _floor_schedule(
             *spgemm_hash.host_schedule(A, B, sym_binning, sym_ladder,
-                                       headroom=_SCHEDULE_HEADROOM,
+                                       headroom=headroom,
                                        packs=sym_packs),
             sched.sym_row_buckets if sched else None,
             sched.sym_fall_prod_bucket if sched else 0)
@@ -179,7 +184,7 @@ def _execute_steps(A: CSR, B: CSR, plan: SpgemmPlan,
     if config.method == "hash":
         num_buckets, num_fall = _floor_schedule(
             *spgemm_hash.host_schedule(A, B, num_binning, num_ladder,
-                                       headroom=_SCHEDULE_HEADROOM),
+                                       headroom=headroom),
             sched.num_row_buckets if sched else None,
             sched.num_fall_prod_bucket if sched else 0)
         C, _, _ = spgemm_hash.numeric_scheduled(
@@ -409,6 +414,7 @@ class _Finished:
 
     uid: int
     result: SpgemmResult
+    auto_entry: Optional[CacheEntry] = None  # AUTO_SHARDS policy entry
 
 
 @dataclasses.dataclass
@@ -423,6 +429,7 @@ class _Pending:
     B: CSR
     handles: tuple      # (C, total_nprod, total_nnz, sym_binning, num_binning)
     t0: float
+    auto_entry: Optional[CacheEntry] = None  # AUTO_SHARDS policy entry
 
 
 @dataclasses.dataclass
@@ -442,6 +449,7 @@ class _ShardedPending:
     B: CSR              # verification and overflowed-shard redo
     config: SpgemmConfig
     t0: float
+    auto_entry: Optional[CacheEntry] = None  # AUTO_SHARDS policy entry
 
 
 _Record = Union[_Finished, _Pending, _ShardedPending]
@@ -482,14 +490,25 @@ class SpgemmEngine:
     merge finalizer concatenates back — one plan, N shards.  ``mesh``
     optionally places shard s on the s-th data-axis device of a
     ``launch/mesh.py`` mesh (replicated B, row-sharded A).
+
+    ``shards="auto"`` replaces the static knob with the adaptive policy
+    (``engine/autotune.py``): N is learned per plan from the cold flop
+    estimate bounded by device occupancy, and revised from finalize
+    telemetry when the stream's flop mean drifts (tiny products collapse
+    to N=1).  ``policy`` tunes the :class:`AdaptivePolicy` knobs — it
+    also governs the tracked-jitter hash-schedule headroom (grow on
+    overflow, trim on sustained eviction-free streaks).
     """
 
     def __init__(self, config: Optional[SpgemmConfig] = None, *,
-                 cache_capacity: int = 64, shards: int = 1, mesh=None):
-        assert shards >= 1
+                 cache_capacity: int = 64,
+                 shards: Union[int, str] = 1, mesh=None,
+                 policy: Optional[AdaptivePolicy] = None):
+        assert shards == "auto" or shards >= 1, shards
         self.config = config or SpgemmConfig()
         self.shards = shards
         self.mesh = mesh
+        self.policy = policy or AdaptivePolicy()
         self.cache = PlanCache(cache_capacity)
         self.stats = EngineStats()
         self._queue: List[SpgemmRequest] = []
@@ -505,14 +524,16 @@ class SpgemmEngine:
     # -- public API ---------------------------------------------------------
     def _effective_config(self, config: Optional[SpgemmConfig]) -> SpgemmConfig:
         """Resolve the per-call config.  The engine-level ``shards`` knob
-        only folds into the engine's own default config — an explicitly
-        passed config is taken verbatim, so ``SpgemmConfig(shards=1)``
-        opts a single call out of engine-level sharding."""
+        (an int, or ``"auto"`` = AUTO_SHARDS adaptive selection) only
+        folds into the engine's own default config — an explicitly passed
+        config is taken verbatim, so ``SpgemmConfig(shards=1)`` opts a
+        single call out of engine-level sharding."""
         if config is not None:
             return config
         config = self.config
-        if self.shards > 1 and config.shards == 1:
-            config = dataclasses.replace(config, shards=self.shards)
+        if self.shards != 1 and config.shards == 1:
+            shards = AUTO_SHARDS if self.shards == "auto" else self.shards
+            config = dataclasses.replace(config, shards=shards)
         return config
 
     def execute(self, A: CSR, B: CSR,
@@ -542,8 +563,9 @@ class SpgemmEngine:
         config = self._effective_config(config)
         if config.shards != 1:       # not assert: must survive python -O
             raise ValueError(
-                "prewarm seeds capacity buckets, which sharded plans don't "
-                "use; pass SpgemmConfig(shards=1) or PlanCache.load() a dump")
+                "prewarm seeds capacity buckets, which sharded (or "
+                "AUTO_SHARDS) plans don't use; pass SpgemmConfig(shards=1) "
+                "or PlanCache.load() a dump")
         a_sig, b_sig = MatrixSig.of(A), MatrixSig.of(B)
         entry = self.cache.get((a_sig, b_sig, config))
         if entry is None:
@@ -600,13 +622,19 @@ class SpgemmEngine:
             return results
 
         pending: List[_Record] = []
+        window = max(1, int(window))
         for req in ordered:
+            # Reap down BEFORE dispatching: appending first would hold
+            # window+1 concurrent dispatches (off-by-one — the window is a
+            # device-memory bound, so the bound must hold at dispatch).
+            while len(pending) >= window:
+                self._reap_one(pending, results)
             rec = self._dispatch(req.uid, req.A, req.B, req.config)
             if any(not isinstance(r, _Finished) for r in pending):
                 self.stats.overlapped += 1   # planned k+1 while k ran
             pending.append(rec)
-            while len(pending) > window:
-                self._reap_one(pending, results)
+            self.stats.peak_inflight = max(self.stats.peak_inflight,
+                                           len(pending))
         while pending:
             self._reap_one(pending, results)
         return results
@@ -632,6 +660,11 @@ class SpgemmEngine:
     def _dispatch(self, uid: int, A: CSR, B: CSR, config: SpgemmConfig, *,
                   _sub: bool = False) -> _Record:
         assert A.ncols == B.nrows, (A.shape, B.shape)
+        if config.shards == AUTO_SHARDS:
+            auto_entry, config = self._resolve_auto_shards(A, B, config)
+            rec = self._dispatch(uid, A, B, config, _sub=_sub)
+            rec.auto_entry = auto_entry   # finalize feeds telemetry back
+            return rec
         if config.shards > 1:
             if A.nrows >= 2:
                 return self._dispatch_sharded(uid, A, B, config)
@@ -657,8 +690,11 @@ class SpgemmEngine:
                         and config.method in ("esc", "hash")
                         and not config.timing)
         if not hot_eligible:
+            state = plan.policy or PolicyState(
+                headroom=self.policy.headroom_init)
             result, prod_cap, nnz_cap, hash_sched = _execute_steps(
-                A, B, plan, StepTimer(config.timing))
+                A, B, plan, StepTimer(config.timing),
+                headroom=state.headroom)
             if not plan.is_specialized:
                 # Progressive allocation: learn the buckets (and, for the
                 # hash method, the launch schedule the run just used) for
@@ -666,6 +702,7 @@ class SpgemmEngine:
                 specialized = plan.with_capacities(prod_cap, nnz_cap)
                 if hash_sched is not None:
                     specialized = specialized.with_hash_schedule(hash_sched)
+                    specialized = specialized.with_policy(state)
                 self.cache.specialize(entry, specialized)
             entry.stats.steps_calls += 1
             entry.stats.time_s += time.perf_counter() - t0
@@ -745,7 +782,61 @@ class SpgemmEngine:
         return _ShardedPending(uid, entry, spec, shard_recs, A, B,
                                config, t0)
 
+    # -- adaptive shard count (AUTO_SHARDS) ---------------------------------
+    def _device_count(self) -> int:
+        """Per-shard occupancy bound: the devices shards could land on."""
+        if self.mesh is not None:
+            return len(data_axis_devices(self.mesh))
+        return jax.local_device_count()
+
+    def _resolve_auto_shards(self, A: CSR, B: CSR, config: SpgemmConfig):
+        """Turn an AUTO_SHARDS config into a concrete one via the policy.
+
+        The decision lives on the AUTO plan entry (keyed by the unresolved
+        config), so it is learned once per signature — ONE host read of
+        the flop estimate on the cold request, like the shard partitioner
+        — then pinned; finalize-side telemetry (:meth:`_note_auto`) can
+        revise it when the stream's flop mean drifts out of the
+        hysteresis band (shrinking to 1 for tiny products where the merge
+        finalizer dominates).
+        """
+        self.stats.auto_requests += 1
+        a_sig, b_sig = MatrixSig.of(A), MatrixSig.of(B)
+        entry = self.cache.get((a_sig, b_sig, config))
+        if entry is None:
+            entry = self.cache.insert(make_plan(a_sig, b_sig, config))
+        state = entry.plan.policy
+        if state is None or state.shard_decision is None:
+            flops = row_flops(A, B)          # host int64 (the one sync)
+            total = int(flops.sum())
+            n = autotune.choose_shards(total, A.nrows, self._device_count(),
+                                       self.policy)
+            state = ((state or PolicyState(headroom=self.policy.headroom_init))
+                     .with_shard_decision(n, total))
+            self.cache.update_policy(entry, state)
+        n = state.shard_decision
+        return entry, dataclasses.replace(config, shards=max(n, 1))
+
+    def _note_auto(self, entry: CacheEntry, result: SpgemmResult) -> None:
+        """Feed one finalized request's flop estimate back to its AUTO
+        plan's policy, revising the shard decision on sustained drift."""
+        state = entry.plan.policy
+        if state is None:
+            return
+        state = state.note_flops(2 * result.total_nprod)
+        state, revised = autotune.revise_shards(
+            state, entry.plan.a_sig.nrows, self._device_count(), self.policy)
+        if revised:
+            self.stats.policy_revisions += 1
+        self.cache.update_policy(entry, state)
+
     def _finalize(self, rec: _Record) -> SpgemmResult:
+        result = self._finalize_record(rec)
+        if rec.auto_entry is not None:
+            self._note_auto(rec.auto_entry, result)
+        return result
+
+    def _finalize_record(self, rec: _Record) -> SpgemmResult:
         if isinstance(rec, _ShardedPending):
             return self._finalize_sharded(rec)
         if isinstance(rec, _Finished):
@@ -769,7 +860,9 @@ class SpgemmEngine:
                 self.stats.bin_overflows += 1
                 rec.entry.stats.bin_overflows += 1
             if not schedule_ok or total_nnz > plan.nnz_bucket:
-                return self._grow_and_redo(rec, total_nprod, total_nnz)
+                return self._grow_and_redo(rec, total_nprod, total_nnz,
+                                           schedule_overflow=not schedule_ok)
+            self._note_hash_admit(rec, fetched[2], fetched[3])
         elif plan.config.method == "hash":
             (C, tnp, tnz, sym_binning, num_binning,
              sym_fall, num_fall) = rec.handles
@@ -784,7 +877,10 @@ class SpgemmEngine:
                 self.stats.bin_overflows += 1
                 rec.entry.stats.bin_overflows += 1
             if not schedule_ok or total_nnz > plan.nnz_bucket:
-                return self._grow_and_redo(rec, total_nprod, total_nnz)
+                return self._grow_and_redo(rec, total_nprod, total_nnz,
+                                           schedule_overflow=not schedule_ok)
+            self._note_hash_admit(rec, fetched[2], fetched[4],
+                                  num_sizes=fetched[3], num_fall=fetched[5])
         else:
             C, tnp, tnz, sym_binning, num_binning = rec.handles
             total_nprod, total_nnz = (
@@ -867,11 +963,51 @@ class SpgemmEngine:
             total_nnz=sum(r.total_nnz for r in shard_results),
             sym_binning=None, num_binning=None, timings=timings)
 
+    def _note_hash_admit(self, rec: _Pending, sym_sizes, sym_fall,
+                         num_sizes=None, num_fall=0) -> None:
+        """Adaptive-headroom telemetry for one ADMITTED hash finalize.
+
+        Folds the bin sizes the verify sync already fetched into the
+        plan's policy state (streak maxima — capture is free, no extra
+        sync).  Once the eviction-free streak reaches the policy
+        threshold, re-derive the schedule from the observed maxima at a
+        shrunken headroom and swap it in iff that actually removes
+        padded grid steps or whole rungs — ONE deliberate retrace that
+        stops a stable stream paying for day-one jitter margins.  At most
+        one trim fires per overflow epoch (``PolicyState.trimmed``).
+        """
+        entry = rec.entry
+        plan = entry.plan      # CURRENT plan: maxima fold monotonically
+        if plan.hash_schedule is None:
+            return
+        state = plan.policy or PolicyState(headroom=self.policy.headroom_init)
+        state = state.note_admit(sym_sizes, sym_fall, num_sizes, num_fall)
+        if state.wants_trim(self.policy):
+            trimmed = autotune.trim_schedule(
+                state, plan.hash_schedule, m=plan.a_sig.nrows,
+                sym_ladder=plan.sym_ladder, packed=plan.config.row_packing,
+                fused=plan.config.fuse_numeric, policy=self.policy)
+            state = state.after_trim(self.policy)
+            if trimmed is not None:
+                self.stats.schedule_trims += 1
+                entry.stats.schedule_trims += 1
+                self.cache.specialize(entry, plan.with_hash_schedule(
+                    HashSchedule(*trimmed)).with_policy(state))
+                return
+        self.cache.update_policy(entry, state)
+
     def _grow_and_redo(self, rec: _Pending, total_nprod: int,
-                       total_nnz: int) -> SpgemmResult:
+                       total_nnz: int, *,
+                       schedule_overflow: bool = False) -> SpgemmResult:
         """Overflow recovery (rare: a same-signature request outgrew the
         learned plan).  Grow the buckets, redo via the steps path, and
-        re-specialize the entry so the NEXT request is hot again."""
+        re-specialize the entry so the NEXT request is hot again.
+
+        ``schedule_overflow`` marks a hash BIN-SCHEDULE overflow (a rung
+        or fallback capacity evicted rows) — the only signal the adaptive
+        headroom tracks.  A pure nnz/prod capacity overflow with an
+        admitting schedule grows the pow-2 buckets but must NOT inflate
+        the bin headroom: the bins never jittered."""
         plan = rec.plan
         self.stats.capacity_grows += 1
         rec.entry.stats.capacity_grows += 1
@@ -885,8 +1021,17 @@ class SpgemmEngine:
                 next_bucket(max(total_nprod, 1))),
             max(plan.nnz_bucket, current.nnz_bucket or 0,
                 next_bucket(max(total_nnz, 1))))
+        # Tracked-jitter headroom: the stream just proved it jitters more
+        # than the schedule allowed — the redo re-derives with a grown
+        # headroom (and a fresh streak/trim epoch).
+        state = current.policy or PolicyState(
+            headroom=self.policy.headroom_init)
+        if schedule_overflow:
+            state = state.note_overflow(self.policy)
+        grown = grown.with_policy(state)
         result, prod_cap, nnz_cap, hash_sched = _execute_steps(
-            rec.A, rec.B, grown, StepTimer(False))
+            rec.A, rec.B, grown, StepTimer(False), headroom=state.headroom)
+        rec.entry.stats.steps_calls += 1   # the redo ran the steps oracle
         respecialized = grown.with_capacities(prod_cap, nnz_cap)
         if hash_sched is not None:
             # The redo floored at the DISPATCH plan's schedule; union with

@@ -72,6 +72,19 @@ class ShardSpec:
             max(a, b) for a, b in zip(self.cap_buckets, other.cap_buckets)))
 
 
+# A shard below this many rows cannot be cut further without empty
+# blocks; the feasibility clamp the adaptive policy (engine/autotune)
+# applies before pinning a shard-count decision.
+MIN_SHARD_ROWS = 2
+
+
+def clamp_shards(nrows: int, n: int) -> int:
+    """Feasible shard count for an ``nrows``-row A: at least 1, at most
+    one shard per ``MIN_SHARD_ROWS`` rows (``balanced_bounds`` keeps >=1
+    real row per shard; this keeps the blocks worth slicing at all)."""
+    return max(1, min(int(n), max(int(nrows) // MIN_SHARD_ROWS, 1)))
+
+
 def balanced_bounds(weights: np.ndarray, n_shards: int) -> Tuple[int, ...]:
     """Contiguous row-block boundaries balancing cumulative ``weights``.
 

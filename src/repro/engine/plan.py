@@ -26,6 +26,7 @@ from repro.core.csr import CSR
 from repro.core.spgemm import SpgemmConfig, next_bucket
 from repro.core.workspace import WorkspacePlan
 
+from .autotune import PolicyState
 from .partition import ShardSpec
 
 
@@ -141,6 +142,11 @@ class SpgemmPlan:
       shard_spec       learned row-block partition (sharded plans only,
                        ``config.shards > 1``; ``None`` until the cold call
                        balances the blocks by cumulative flop estimate).
+      policy           adaptive-policy state (``engine/autotune``): the
+                       tracked headroom/jitter for hash plans, the shard
+                       decision for AUTO_SHARDS plans.  Updated without
+                       dropping executables (it never enters a trace);
+                       persisted by ``PlanCache.dump/load``.
     """
 
     a_sig: MatrixSig
@@ -154,6 +160,7 @@ class SpgemmPlan:
     nnz_bucket: Optional[int] = None
     hash_schedule: Optional[HashSchedule] = None
     shard_spec: Optional[ShardSpec] = None
+    policy: Optional[PolicyState] = None
 
     @property
     def signature(self) -> PlanKey:
@@ -186,6 +193,11 @@ class SpgemmPlan:
     def with_shard_spec(self, spec: ShardSpec) -> "SpgemmPlan":
         """Plan with a learned (or per-shard-grown) row-block partition."""
         return dataclasses.replace(self, shard_spec=spec)
+
+    def with_policy(self, state: PolicyState) -> "SpgemmPlan":
+        """Plan carrying updated adaptive-policy state (same signature,
+        same traced shapes — cached executables stay valid)."""
+        return dataclasses.replace(self, policy=state)
 
     def admits(self, A: CSR, B: CSR) -> bool:
         """Whether (A, B) land in this plan's shape buckets."""

@@ -51,6 +51,7 @@ class PlanStats:
     steps_calls: int = 0      # served by the host-orchestrated six-step path
     capacity_grows: int = 0   # bucket overflows that forced a re-plan
     bin_overflows: int = 0    # hash bin-count/fallback schedule overflows
+    schedule_trims: int = 0   # headroom-policy schedule shrinks (autotune)
     time_s: float = 0.0       # wall-clock charged to this plan
 
 
@@ -66,6 +67,10 @@ class EngineStats:
     sharded_requests: int = 0 # requests fanned out into row-block shards
     shard_grows: int = 0      # per-shard slice-storage bucket grows
     reordered: int = 0        # drain() finalizes ahead of dispatch order
+    peak_inflight: int = 0    # max concurrent dispatches a drain() held
+    auto_requests: int = 0    # requests routed through AUTO_SHARDS policy
+    policy_revisions: int = 0 # telemetry-driven shard-count re-decisions
+    schedule_trims: int = 0   # headroom-policy hash-schedule shrinks
 
 
 def render(engine) -> str:
@@ -83,8 +88,12 @@ def render(engine) -> str:
         "(%d hash bin overflows)" % (
             total_traces(), s.capacity_grows, s.bin_overflows),
         "sharding: %d sharded requests, %d per-shard bucket grows; "
-        "drain reordered %d finalizes" % (
-            s.sharded_requests, s.shard_grows, s.reordered),
+        "drain reordered %d finalizes (peak %d in flight)" % (
+            s.sharded_requests, s.shard_grows, s.reordered,
+            s.peak_inflight),
+        "policy: %d auto-shard requests, %d shard revisions, "
+        "%d schedule trims" % (
+            s.auto_requests, s.policy_revisions, s.schedule_trims),
     ]
     for key, entry in cache.items():
         ps = entry.stats
@@ -95,6 +104,12 @@ def render(engine) -> str:
             sched = ", sched sym=%s num=%s" % (
                 "/".join(str(b) for b in hs.sym_row_buckets),
                 "/".join(str(b) for b in hs.num_row_buckets))
+        if p.policy is not None:
+            pol = p.policy
+            sched += ", policy headroom=%.2f streak=%d" % (
+                pol.headroom, pol.streak)
+            if pol.shard_decision is not None:
+                sched += " shards->%d" % pol.shard_decision
         if p.shard_spec is not None:
             sched += ", shards=%d bounds=%s caps=%s" % (
                 p.shard_spec.n_shards,

@@ -597,6 +597,41 @@ def symbolic_scheduled(A: CSR, B: CSR, binning: Binning, ladder: BinLadder,
     return nnz_buf, sub_prod, accesses
 
 
+def schedule_bucket(count: int, *, m_cap: int, headroom: float,
+                    pack: int = 1) -> int:
+    """Pow-2 bin-count bucket for one rung's observed row count.
+
+    The ONE shared copy of the schedule bucket math: ``host_schedule``
+    (cold derivation) and ``engine/autotune`` (trim re-derivation from
+    observed maxima) must agree bit-for-bit or a trimmed schedule would
+    drift from what a later cold floor re-derives.  ``count`` is coerced
+    to a Python int, so near-2^31 counts widen instead of wrapping.
+
+    With headroom the bucket must strictly EXCEED the headroom target: an
+    observed count already on a pow-2 would otherwise learn a bucket with
+    zero margin, and any jitter overflows it (the boundary-straddle
+    failure the headroom exists to prevent).  headroom=1.0 (the faithful
+    per-call path) keeps exact buckets.  ``pack`` floors the bucket at a
+    rung's pow-2 rows-per-block so packed kernels get whole grid steps.
+    """
+    count = int(count)
+    if not count:
+        return 0
+    lo = max(_ROW_BUCKET_MIN, int(pack))
+    strict = 1 if headroom > 1.0 else 0
+    return min(max(m_cap, lo),
+               next_bucket(int(np.ceil(count * headroom)) + strict,
+                           minimum=lo))
+
+
+def fallback_capacity_bucket(sub_prod: int, *, headroom: float) -> int:
+    """Pow-2 capacity bucket for the fallback rung's ESC expansion (same
+    strict-exceed rule as :func:`schedule_bucket`; host int math)."""
+    strict = 1 if headroom > 1.0 else 0
+    return next_bucket(int(np.ceil(max(int(sub_prod), 1) * headroom))
+                       + strict, minimum=_ROW_BUCKET_MIN)
+
+
 def host_schedule(A: CSR, B: CSR, binning: Binning, ladder: BinLadder, *,
                   headroom: float = 1.0, packs: Tuple[int, ...] = None):
     """Host-side schedule derivation (the cold path's ONE metadata sync).
@@ -616,33 +651,20 @@ def host_schedule(A: CSR, B: CSR, binning: Binning, ladder: BinLadder, *,
     """
     sizes = np.asarray(binning.bin_size)       # host sync: launch schedule
     m_cap = next_bucket(binning.bins.shape[0], minimum=_ROW_BUCKET_MIN)
-    # With headroom the bucket must strictly EXCEED the headroom target:
-    # an observed count already on a pow-2 would otherwise learn a bucket
-    # with zero margin, and any jitter overflows it (the boundary-straddle
-    # failure the headroom exists to prevent).  headroom=1.0 (the faithful
-    # per-call path) keeps exact buckets.
-    strict = 1 if headroom > 1.0 else 0
 
-    def bucket_of(b: int, s: int) -> int:
-        if not s:
-            return 0
-        lo = _ROW_BUCKET_MIN
-        if packs is not None and b < len(packs):
-            lo = max(lo, packs[b])
-        return min(max(m_cap, lo),
-                   next_bucket(int(np.ceil(int(s) * headroom)) + strict,
-                               minimum=lo))
-
-    row_buckets = tuple(bucket_of(b, int(s)) for b, s in enumerate(sizes))
+    row_buckets = tuple(
+        schedule_bucket(
+            s, m_cap=m_cap, headroom=headroom,
+            pack=(packs[b] if packs is not None and b < len(packs) else 1))
+        for b, s in enumerate(sizes))
     fallback_prod_capacity = 0
     if row_buckets[-1]:
         rows, valid = _fallback_rows(binning, ladder, row_buckets[-1],
                                      A.nrows)
         sub_prod = int(jnp.sum(                # host sync: fallback alloc
             jnp.where(valid, nprod_of_rows(A, B, rows), 0)))
-        fallback_prod_capacity = next_bucket(
-            int(np.ceil(max(sub_prod, 1) * headroom)) + strict,
-            minimum=_ROW_BUCKET_MIN)
+        fallback_prod_capacity = fallback_capacity_bucket(
+            sub_prod, headroom=headroom)
     return row_buckets, fallback_prod_capacity
 
 

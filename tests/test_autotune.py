@@ -1,0 +1,320 @@
+"""Adaptive execution policy (ISSUE 5): telemetry-driven shard count,
+tracked-jitter hash-schedule headroom, fused-by-default fallback, and the
+host-int64 policy/bucket math audit."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (CSR, SpgemmConfig, next_bucket, random_csr, spgemm,
+                        spgemm_reference)
+from repro.core.binning_ranges import symbolic_ladder
+from repro.core.spgemm import AUTO_SHARDS
+from repro.engine import (AdaptivePolicy, HashSchedule, MatrixSig,
+                          PolicyState, SpgemmEngine, choose_shards,
+                          clamp_shards, revise_shards, total_traces,
+                          trim_schedule)
+from repro.engine.autotune import trim_buckets, trim_fallback
+from repro.kernels.spgemm_hash import (fallback_capacity_bucket,
+                                       schedule_bucket)
+
+
+def _pair(seed, m=32, k=28, n=36, da=3.0, db=3.0, dist="uniform"):
+    A = random_csr(jax.random.PRNGKey(seed), m, k, avg_nnz_per_row=da,
+                   distribution=dist)
+    B = random_csr(jax.random.PRNGKey(seed + 1), k, n, avg_nnz_per_row=db,
+                   distribution=dist)
+    return A, B
+
+
+# ---------------------------------------------------------------------------
+# Shard-count selection (pure policy math).
+# ---------------------------------------------------------------------------
+
+def test_choose_shards_scales_with_flops_and_occupancy():
+    pol = AdaptivePolicy(min_shard_flops=1000, max_shards=None)
+    # Tiny products collapse to 1 (the merge finalizer would dominate).
+    assert choose_shards(10, nrows=1000, devices=8, policy=pol) == 1
+    assert choose_shards(999, nrows=1000, devices=8, policy=pol) == 1
+    # Enough flops for 3 shards, but occupancy bounds the fan-out.
+    assert choose_shards(3500, nrows=1000, devices=2, policy=pol) == 2
+    assert choose_shards(3500, nrows=1000, devices=8, policy=pol) == 3
+    # max_shards is a hard cap over the device count.
+    cap = dataclasses.replace(pol, max_shards=2)
+    assert choose_shards(10**9, nrows=1000, devices=8, policy=cap) == 2
+    # Row feasibility: never more shards than the rows can carry.
+    assert choose_shards(10**9, nrows=3, devices=8, policy=pol) == 1
+    assert clamp_shards(8, 100) == 4 and clamp_shards(1, 5) == 1
+
+
+def test_revise_shards_hysteresis_band():
+    pol = AdaptivePolicy(min_shard_flops=1000, max_shards=4,
+                         revise_period=2, revise_factor=2.0)
+    state = PolicyState().with_shard_decision(4, 8000)
+    # Window not full yet: no review.
+    state = state.note_flops(7000)
+    state, revised = revise_shards(state, 1000, 4, pol)
+    assert not revised and state.flops_calls == 1
+    # Mean inside [basis/2, basis*2]: window resets, decision holds.
+    state = state.note_flops(5000)
+    state, revised = revise_shards(state, 1000, 4, pol)
+    assert not revised and state.shard_decision == 4
+    assert state.flops_calls == 0
+    # Sustained drift far below the band: shrink (here to 1).
+    for f in (100, 120):
+        state = state.note_flops(f)
+    state, revised = revise_shards(state, 1000, 4, pol)
+    assert revised and state.shard_decision == 1
+    assert state.shard_basis == 110
+
+
+def test_engine_auto_shards_shrink_to_one_on_tiny_products():
+    """The acceptance scenario: a stream that turns tiny must stop
+    fanning out — the policy revises N down to 1 from telemetry."""
+    pol = AdaptivePolicy(min_shard_flops=1000, max_shards=2,
+                         revise_period=2, revise_factor=2.0,
+                         trim_streak=10**6)
+    engine = SpgemmEngine(shards="auto", policy=pol)
+    A, B = _pair(1, m=48, k=40, n=36, da=6.0, db=6.0)
+    cap_a = next_bucket(A.capacity)
+    d = np.zeros((48, 40), np.float32)
+    d[:, 0] = 1.0                       # 1 nnz/row: a tiny product
+    A_tiny = CSR.from_dense(d).with_capacity(cap_a)
+    assert MatrixSig.of(A_tiny) == MatrixSig.of(A)   # same AUTO plan
+
+    r = engine.execute(A, B)            # cold: decides N=2 from flops
+    np.testing.assert_allclose(np.asarray(r.C.to_dense()),
+                               np.asarray(spgemm_reference(A, B)),
+                               rtol=1e-5, atol=1e-5)
+    assert engine.stats.sharded_requests == 1
+    auto_entry = engine.cache.get(
+        (MatrixSig.of(A), MatrixSig.of(B),
+         dataclasses.replace(engine.config, shards=AUTO_SHARDS)))
+    assert auto_entry.plan.policy.shard_decision == 2
+
+    ref_tiny = np.asarray(spgemm_reference(A_tiny, B))
+    seen_sharded = engine.stats.sharded_requests
+    for _ in range(4):                  # tiny stream: mean flops collapses
+        r = engine.execute(A_tiny, B)
+        np.testing.assert_allclose(np.asarray(r.C.to_dense()), ref_tiny,
+                                   rtol=1e-5, atol=1e-5)
+    assert engine.stats.policy_revisions == 1
+    assert auto_entry.plan.policy.shard_decision == 1
+    # The last request(s) ran unsharded: the sharded counter stopped.
+    assert engine.stats.sharded_requests < seen_sharded + 4
+    r = engine.execute(A_tiny, B)
+    assert engine.stats.sharded_requests < engine.stats.auto_requests
+    np.testing.assert_allclose(np.asarray(r.C.to_dense()), ref_tiny,
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Tracked-jitter headroom: trim derivation + the engine loop.
+# ---------------------------------------------------------------------------
+
+def test_trim_buckets_shrink_drop_and_pack_floor():
+    current = (64, 32, 16, 0, 8)
+    # Observed maxima over the streak: rung 1 only ever held 9 rows, rung
+    # 2 was never populated, rung 4 (fallback) unseen as well.
+    maxima = (55, 9, 0, 0, 0)
+    out = trim_buckets(maxima, current, m=64, headroom=1.5)
+    assert out == (64, 16, 0, 0, 0)     # shrink, drop, never grow
+    # Pack floors win over the derived bucket (packed fused rungs).
+    out = trim_buckets(maxima, current, m=64, headroom=1.5,
+                       packs=(1, 32, 1, 1))
+    assert out == (64, 32, 0, 0, 0)
+    # Fallback capacity trims with its rows bucket, 0 when the rung drops.
+    assert trim_fallback(100, 4096, 1.5, rows_bucket=0) == 0
+    assert trim_fallback(100, 4096, 1.5, rows_bucket=8) == 256
+    assert trim_fallback(0, 4096, 1.5, rows_bucket=8) == 4096  # conservative
+
+
+def test_trim_schedule_noop_returns_none():
+    sched = HashSchedule(sym_row_buckets=(16, 0, 0, 0, 0, 0, 0, 0, 0),
+                         num_row_buckets=(16, 0, 0, 0, 0, 0, 0, 0),
+                         sym_fall_prod_bucket=0, num_fall_prod_bucket=0)
+    state = PolicyState(streak=8,
+                        sym_max=(9, 0, 0, 0, 0, 0, 0, 0, 0),
+                        num_max=(9, 0, 0, 0, 0, 0, 0, 0))
+    pol = AdaptivePolicy()
+    out = trim_schedule(state, sched, m=16, sym_ladder=symbolic_ladder(1.2),
+                        packed=False, fused=False, policy=pol)
+    assert out is None                  # 16 is already the floor bucket
+
+
+def test_engine_headroom_shrinks_on_stable_stream_zero_retraces():
+    """Stable stream: after the trim streak, the schedule re-derives at a
+    shrunken headroom (one deliberate retrace), then stays zero-retrace —
+    padded grid steps actually go away."""
+    m = 64
+    d = np.zeros((m, m), np.float32)
+    d[:9, :30] = 1.0                    # 9 rows -> sym rung 1 (27..426)
+    d[9:, 0] = 1.0                      # 55 rows -> sym rung 0
+    A = CSR.from_dense(d)
+    Bc = CSR.from_dense(np.eye(m, dtype=np.float32))
+    pol = AdaptivePolicy(trim_streak=3)
+    engine = SpgemmEngine(SpgemmConfig(method="hash"), policy=pol)
+    oracle = SpgemmEngine(SpgemmConfig(method="hash", fuse_numeric=False))
+    ref = oracle.execute(A, Bc)
+
+    engine.execute(A, Bc)               # cold (learns 2x-headroom schedule)
+    entry = next(iter(engine.cache.items()))[1]
+    sched0 = entry.plan.hash_schedule
+    assert sched0.sym_row_buckets[1] == 32      # 9 rows @ 2x -> 32
+    for _ in range(3):                  # eviction-free streak -> trim
+        engine.execute(A, Bc)
+    assert engine.stats.schedule_trims == 1
+    sched1 = entry.plan.hash_schedule
+    assert sched1.sym_row_buckets[1] == 16      # 9 rows @ 1.5x -> 16
+    assert entry.plan.policy.headroom == pytest.approx(1.5)
+    assert entry.plan.policy.trimmed            # one trim per epoch
+
+    r = engine.execute(A, Bc)           # one rebuild trace for the trim
+    baseline = total_traces()
+    grows = engine.stats.capacity_grows
+    for _ in range(4):                  # stable stream: zero retraces after
+        r = engine.execute(A, Bc)
+    assert total_traces() == baseline
+    assert engine.stats.capacity_grows == grows
+    assert engine.stats.schedule_trims == 1     # no trim oscillation
+    nnz = ref.total_nnz
+    assert r.total_nnz == nnz                   # bitwise vs two-pass oracle
+    np.testing.assert_array_equal(np.asarray(r.C.rpt), np.asarray(ref.C.rpt))
+    np.testing.assert_array_equal(np.asarray(r.C.col)[:nnz],
+                                  np.asarray(ref.C.col)[:nnz])
+    np.testing.assert_array_equal(np.asarray(r.C.val)[:nnz],
+                                  np.asarray(ref.C.val)[:nnz])
+
+
+def test_headroom_grows_on_overflow_and_trims_rearm():
+    """Overflow doubles the tracked headroom (capped) and re-arms the trim
+    epoch; the redone stream is correct."""
+    m = 64
+    d_small = np.zeros((m, m), np.float32)
+    d_small[np.arange(m), np.arange(m)] = 1.0
+    d_big = np.zeros((m, m), np.float32)
+    d_big[:, :32] = 1.0
+    dB = np.eye(m, dtype=np.float32)
+    A_small = CSR.from_dense(d_small).with_capacity(2048)
+    A_big = CSR.from_dense(d_big)
+    Bc = CSR.from_dense(dB)
+    assert MatrixSig.of(A_small) == MatrixSig.of(A_big)
+
+    engine = SpgemmEngine(SpgemmConfig(method="hash"))
+    engine.execute(A_small, Bc)
+    engine.execute(A_small, Bc)                 # hot path established
+    entry = next(iter(engine.cache.items()))[1]
+    r = engine.execute(A_big, Bc)               # schedule overflow
+    np.testing.assert_allclose(np.asarray(r.C.to_dense()), d_big @ dB,
+                               rtol=1e-5)
+    assert engine.stats.bin_overflows == 1
+    assert entry.plan.policy.headroom == pytest.approx(4.0)  # 2x grown
+    assert not entry.plan.policy.trimmed and entry.plan.policy.streak == 0
+
+
+def test_capacity_only_overflow_keeps_headroom():
+    """A pure nnz-capacity overflow (bins all admitted) must grow the
+    pow-2 buckets but NOT inflate the bin headroom — the bins never
+    jittered, and 4x-padded grid steps would be pure waste."""
+    m, k = 8, 32
+    d_small = np.zeros((m, k), np.float32)
+    d_small[:, :2] = 1.0                 # nprod 2/row -> rung 0, tiny nnz
+    d_big = np.zeros((m, k), np.float32)
+    d_big[:, :26] = 1.0                  # nprod 26/row -> STILL rung 0
+    A_small = CSR.from_dense(d_small).with_capacity(256)
+    A_big = CSR.from_dense(d_big).with_capacity(256)
+    Bc = CSR.from_dense(np.eye(k, dtype=np.float32))
+    assert MatrixSig.of(A_small) == MatrixSig.of(A_big)
+
+    engine = SpgemmEngine(SpgemmConfig(method="hash"))
+    engine.execute(A_small, Bc)
+    engine.execute(A_small, Bc)          # hot path established
+    entry = next(iter(engine.cache.items()))[1]
+    r = engine.execute(A_big, Bc)        # nnz outgrows the bucket only
+    np.testing.assert_allclose(np.asarray(r.C.to_dense()),
+                               d_big @ np.eye(k, dtype=np.float32),
+                               rtol=1e-5)
+    assert engine.stats.capacity_grows == 1
+    assert engine.stats.bin_overflows == 0
+    assert entry.plan.policy.headroom == pytest.approx(2.0)  # untouched
+
+
+def test_fused_is_hash_default_and_falls_back_to_two_pass():
+    """fuse_numeric=True is the hash default; when ``admits_fused`` fails
+    the request is redone on the two-pass steps oracle automatically and
+    the next same-signature call is hot again."""
+    assert SpgemmConfig().fuse_numeric is True
+    m = 64
+    d_small = np.zeros((m, m), np.float32)
+    d_small[np.arange(m), np.arange(m)] = 1.0
+    d_big = np.zeros((m, m), np.float32)
+    d_big[:, :32] = 1.0
+    dB = np.eye(m, dtype=np.float32)
+    A_small = CSR.from_dense(d_small).with_capacity(2048)
+    A_big = CSR.from_dense(d_big)
+    Bc = CSR.from_dense(dB)
+
+    engine = SpgemmEngine(SpgemmConfig(method="hash"))
+    assert engine.config.fuse_numeric
+    engine.execute(A_small, Bc)
+    engine.execute(A_small, Bc)
+    entry = next(iter(engine.cache.items()))[1]
+    assert entry.stats.hot_calls == 1 and entry.stats.steps_calls == 1
+
+    r = engine.execute(A_big, Bc)       # fused verify fails -> steps redo
+    np.testing.assert_allclose(np.asarray(r.C.to_dense()), d_big @ dB,
+                               rtol=1e-5)
+    assert engine.stats.bin_overflows == 1
+    assert entry.stats.steps_calls == 2          # the two-pass fallback ran
+    r2 = engine.execute(A_big, Bc)      # grown schedule: fused + hot again
+    np.testing.assert_allclose(np.asarray(r2.C.to_dense()), d_big @ dB,
+                               rtol=1e-5)
+    assert entry.stats.steps_calls == 2 and entry.stats.hot_calls >= 2
+
+
+# ---------------------------------------------------------------------------
+# Integer-width audit: policy/bucket math is host int64 (Python int).
+# ---------------------------------------------------------------------------
+
+def test_policy_accumulators_survive_near_int31_flop_stream():
+    """A stream of near-2^31-flop requests: the telemetry accumulators and
+    the shard review must widen, not wrap (the ``2 * nprod`` guard of
+    ``core/analysis.row_flops``, applied to the policy layer)."""
+    big = 2**31 - 7                     # one request ~ int32 max
+    state = PolicyState().with_shard_decision(2, big)
+    for _ in range(8):
+        state = state.note_flops(np.int64(big))
+    assert state.flops_total == 8 * big          # > 2^34: wrapped math fails
+    assert state.mean_flops == big > 0
+    pol = AdaptivePolicy(min_shard_flops=1 << 20, max_shards=8,
+                         revise_period=8, revise_factor=1.0 + 1e-9)
+    state, revised = revise_shards(state, nrows=10**6, devices=8, policy=pol)
+    assert state.shard_basis == big              # exact, not negative
+
+
+def test_bucket_math_survives_near_int31_counts():
+    """Headroom growth (`next_bucket` doubling) on near-2^31 observed
+    counts computes in host int: buckets come out positive pow-2 ABOVE
+    the int32 range instead of wrapping."""
+    big = 2**31 - 100
+    b = schedule_bucket(np.int64(big), m_cap=2**40, headroom=2.0)
+    assert b == 2**32 and b > 2**31              # widened, not wrapped
+    assert schedule_bucket(big, m_cap=2**40, headroom=1.0) == 2**31
+    fb = fallback_capacity_bucket(np.int64(big), headroom=2.0)
+    assert fb == 2**32 > 0
+    assert next_bucket(2 * big) == 2**32
+    # choose_shards on a multi-billion-flop estimate.
+    pol = AdaptivePolicy(min_shard_flops=1 << 30, max_shards=64)
+    assert choose_shards(2**36, nrows=10**6, devices=64, policy=pol) == 64
+    # Trimming with near-wrap maxima stays monotone and positive.
+    out = trim_buckets((big,), (2**32,), m=2**40, headroom=2.0)
+    assert out == (2**32,)
+
+
+def test_spgemm_auto_shards_knob():
+    A, B = _pair(7)
+    r = spgemm(A, B, shards="auto")
+    np.testing.assert_allclose(np.asarray(r.C.to_dense()),
+                               np.asarray(spgemm_reference(A, B)),
+                               rtol=1e-5, atol=1e-5)

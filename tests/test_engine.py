@@ -145,6 +145,50 @@ def test_engine_batched_drain_matches_oracle():
     assert len(engine.cache) == 2          # one plan per shape bucket
 
 
+def test_drain_bounds_inflight_at_window():
+    """Regression for the drain() off-by-one: dispatching before reaping
+    held ``window + 1`` records in flight.  The bound is a device-memory
+    budget, so it must hold at the moment of dispatch — count live
+    records across dispatch/finalize and pin the peak at ``window``."""
+
+    class Probe(SpgemmEngine):
+        live = 0
+        peak = 0
+
+        def _dispatch(self, *a, **k):
+            rec = super()._dispatch(*a, **k)
+            self.live += 1
+            self.peak = max(self.peak, self.live)
+            return rec
+
+        def _finalize(self, rec):
+            out = super()._finalize(rec)
+            self.live -= 1
+            return out
+
+    engine = Probe()
+    A, B = _pair(130)
+    engine.execute(A, B)                  # specialize: dispatches go async
+    cap_a, cap_b = MatrixSig.of(A).cap_bucket, MatrixSig.of(B).cap_bucket
+    reqs = []
+    for s in range(9):
+        A2, B2 = _pair(140 + s)
+        reqs.append((engine.submit(A2.with_capacity(cap_a),
+                                   B2.with_capacity(cap_b)), A2, B2))
+    engine.live = engine.peak = 0
+    results = engine.drain(window=3)
+    assert engine.peak <= 3               # was window + 1 = 4 before the fix
+    assert engine.stats.peak_inflight <= 3
+    assert len(results) == len(reqs)
+    for uid, A2, B2 in reqs:
+        np.testing.assert_allclose(np.asarray(results[uid].C.to_dense()),
+                                   np.asarray(spgemm_reference(A2, B2)),
+                                   rtol=1e-5, atol=1e-5)
+    # Degenerate window values still drain everything.
+    engine.submit(A, B)
+    assert len(engine.drain(window=1)) == 1
+
+
 def test_engine_drain_overlaps_requests():
     engine = SpgemmEngine()
     A, B = _pair(60)

@@ -214,7 +214,9 @@ def test_engine_fused_steady_state_zero_retraces(row_packing):
     cfg = SpgemmConfig(method="hash", fuse_numeric=True,
                        row_packing=row_packing)
     engine = SpgemmEngine(cfg)
-    oracle = SpgemmEngine(SpgemmConfig(method="hash"))
+    # Explicit two-pass oracle: fuse_numeric became the hash DEFAULT, so
+    # a bare hash config would compare the fused executable with itself.
+    oracle = SpgemmEngine(SpgemmConfig(method="hash", fuse_numeric=False))
     pairs = [_pair(31 + s, 48, 64, 56, 4.0, 3.0) for s in range(5)]
     cap_a = next_bucket(max(A.capacity for A, _ in pairs))
     cap_b = next_bucket(max(B.capacity for _, B in pairs))
@@ -258,6 +260,84 @@ def test_engine_fused_overflow_grows_and_recovers():
         ref = np.asarray(A.to_dense()) @ np.asarray(B.to_dense())
         np.testing.assert_allclose(np.asarray(res.C.to_dense()), ref,
                                    rtol=1e-4, atol=1e-4)
+
+
+def _bitwise_same(C1, C2, nnz):
+    np.testing.assert_array_equal(np.asarray(C1.rpt), np.asarray(C2.rpt))
+    np.testing.assert_array_equal(np.asarray(C1.col)[:nnz],
+                                  np.asarray(C2.col)[:nnz])
+    np.testing.assert_array_equal(np.asarray(C1.val)[:nnz],
+                                  np.asarray(C2.val)[:nnz])
+
+
+@pytest.mark.parametrize("row_packing", [False, True])
+def test_fused_degenerate_all_zero_rows(row_packing):
+    """All-zero rows under the fused/packed path: empty rows become empty
+    sub-tables (nnz 0, no scatter), bitwise-mirroring the two-pass
+    oracle.  Regression for the packed sub-table offsets of empty rows."""
+    from repro.core import CSR
+    m = 48
+    d = np.zeros((m, 40), np.float32)
+    rng = np.random.RandomState(0)
+    occupied = rng.choice(m, size=m // 3, replace=False)
+    d[occupied, :5] = rng.rand(len(occupied), 5).astype(np.float32) + 0.5
+    A = CSR.from_dense(d)
+    B = random_csr(jax.random.PRNGKey(3), 40, 36, avg_nnz_per_row=4.0)
+    sym_lad, num_lad = symbolic_ladder(1.2), numeric_ladder(2.0)
+    C2, cap, sym_bn = _two_pass(A, B, sym_lad, num_lad)
+    C1 = spgemm_hash.fused_binned(A, B, sym_bn, sym_lad, nnz_capacity=cap,
+                                  row_packing=row_packing)
+    nnz = int(C2.rpt[-1])
+    assert nnz > 0
+    _bitwise_same(C1, C2, nnz)
+    # Zero rows really are zero in the result.
+    rpt = np.asarray(C1.rpt)
+    empty = np.setdiff1d(np.arange(m), occupied)
+    assert (rpt[empty + 1] == rpt[empty]).all()
+
+
+@pytest.mark.parametrize("zero_side", ["A", "B", "both"])
+def test_fused_degenerate_nnz_zero_matrices(zero_side):
+    """nnz=0 operands through the fused/packed pipeline: the result is the
+    empty CSR, bitwise-mirroring the two-pass oracle (empty rows' packed
+    sub-table offsets must not scatter anything)."""
+    from repro.core import CSR
+    m, k, n = 32, 28, 24
+    A = (CSR.from_dense(np.zeros((m, k), np.float32)) if zero_side != "B"
+         else random_csr(jax.random.PRNGKey(5), m, k, avg_nnz_per_row=3.0))
+    B = (CSR.from_dense(np.zeros((k, n), np.float32)) if zero_side != "A"
+         else random_csr(jax.random.PRNGKey(6), k, n, avg_nnz_per_row=3.0))
+    sym_lad, num_lad = symbolic_ladder(1.2), numeric_ladder(2.0)
+    C2, cap, sym_bn = _two_pass(A, B, sym_lad, num_lad)
+    C1 = spgemm_hash.fused_binned(A, B, sym_bn, sym_lad, nnz_capacity=cap,
+                                  row_packing=True)
+    assert int(C1.rpt[-1]) == 0
+    _bitwise_same(C1, C2, 0)
+    assert not np.asarray(C1.to_dense()).any()
+
+
+def test_engine_fused_packed_degenerate_stream():
+    """The engine's fused+packed steady state on degenerate inputs: an
+    all-zero A and a zero-row A share the signature bucket with a dense
+    one; every result mirrors the two-pass engine bitwise."""
+    from repro.core import CSR
+    m, k, n = 32, 28, 24
+    cfg = SpgemmConfig(method="hash", fuse_numeric=True, row_packing=True)
+    engine = SpgemmEngine(cfg)
+    oracle = SpgemmEngine(SpgemmConfig(method="hash", fuse_numeric=False))
+    dense, B = _pair(51, m, k, n, 3.0, 3.0)
+    d_half = np.asarray(dense.to_dense()).copy()
+    d_half[m // 2:] = 0.0                # bottom half all-zero rows
+    cap_a = next_bucket(dense.capacity)
+    variants = [dense.with_capacity(cap_a),
+                CSR.from_dense(d_half).with_capacity(cap_a),
+                CSR.from_dense(np.zeros((m, k), np.float32))
+                .with_capacity(cap_a)]
+    for A in variants * 2:               # cold + hot coverage per variant
+        res = engine.execute(A, B)
+        ref = oracle.execute(A, B)
+        assert res.total_nnz == ref.total_nnz
+        _bitwise_same(res.C, ref.C, ref.total_nnz)
 
 
 def test_interpret_auto_detect():

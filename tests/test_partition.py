@@ -277,7 +277,7 @@ def test_plan_cache_dump_load_roundtrip(tmp_path):
     assert n == len(engine.cache)
 
     blob = json.load(open(path))
-    assert blob["version"] == 1 and len(blob["plans"]) == n
+    assert blob["version"] == 2 and len(blob["plans"]) == n
 
     fresh = PlanCache()
     assert fresh.load(path) == n
@@ -346,6 +346,98 @@ def test_noop_load_keeps_live_executables(tmp_path):
     engine.cache.load(path)                    # merge is a no-op
     for key, entry in engine.cache.items():
         assert entry.executable is before[key]  # zero-retrace state kept
+
+
+def test_fused_dump_load_roundtrip_through_steady_state(tmp_path):
+    """Persistence round-trip for FUSED plans (the default hash config):
+    a fresh engine loading the dump serves its first request straight from
+    the fused hot path — no cold steps call, no retrace storm — with
+    bitwise parity against the warm engine."""
+    A, B = _pair(83)
+    cfg = SpgemmConfig(method="hash", fuse_numeric=True, row_packing=True)
+    warm = SpgemmEngine(cfg)
+    base = warm.execute(A, B)
+    warm.execute(A, B)                     # fused steady state reached
+    path = str(tmp_path / "plans.json")
+    warm.cache.dump(path)
+
+    blob = json.load(open(path))
+    assert blob["version"] == 2
+    assert blob["plans"][0]["policy"] is not None   # state persists
+
+    fresh = SpgemmEngine(cfg)
+    fresh.cache.load(path)
+    entry = fresh.cache.get((MatrixSig.of(A), MatrixSig.of(B), cfg))
+    # Pack alignment survives the round-trip: every populated sym bucket
+    # still carves into whole rows_per_block grid steps.
+    packs = entry.plan.sym_ladder.rows_per_block
+    for b, cap in enumerate(entry.plan.hash_schedule.sym_row_buckets):
+        if cap and b < len(packs):
+            assert cap % packs[b] == 0
+    r = fresh.execute(A, B)                # straight to the fused hot path
+    assert sum(e.stats.steps_calls for _, e in fresh.cache.items()) == 0
+    assert fresh.stats.capacity_grows == 0
+    nnz = base.total_nnz
+    assert r.total_nnz == nnz
+    np.testing.assert_array_equal(np.asarray(r.C.rpt),
+                                  np.asarray(base.C.rpt))
+    np.testing.assert_array_equal(np.asarray(r.C.col)[:nnz],
+                                  np.asarray(base.C.col)[:nnz])
+    np.testing.assert_array_equal(np.asarray(r.C.val)[:nnz],
+                                  np.asarray(base.C.val)[:nnz])
+
+
+def test_load_realigns_stale_unpacked_schedule(tmp_path):
+    """A v1 dump (pre-packing/fusion: no policy blob, sym buckets never
+    pack-aligned — here a sub-pack, non-pow-2 bucket) must not be taken
+    at face value by a fused+packed config: load re-derives the pack
+    alignment (monotone) so the fused executable gets whole grid steps,
+    and the first request still verifies and matches the oracle."""
+    A, B = _pair(87)
+    cfg = SpgemmConfig(method="hash", fuse_numeric=True, row_packing=True)
+    warm = SpgemmEngine(cfg)
+    warm.execute(A, B)
+    warm.execute(A, B)
+    path = str(tmp_path / "plans.json")
+    warm.cache.dump(path)
+
+    blob = json.load(open(path))
+    blob["version"] = 1                     # pre-policy payload
+    for plan in blob["plans"]:
+        del plan["policy"]
+        sched = plan["hash_schedule"]
+        # De-align: a stale bucket smaller than the rung's pack (and not
+        # pow-2) that nevertheless admits the observed sizes.
+        sched["sym_row_buckets"] = [
+            max(b // 2 + 1, 1) if b else 0
+            for b in sched["sym_row_buckets"]]
+    json.dump(blob, open(path, "w"))
+
+    fresh = SpgemmEngine(cfg)
+    assert fresh.cache.load(path) == len(blob["plans"])
+    entry = fresh.cache.get((MatrixSig.of(A), MatrixSig.of(B), cfg))
+    packs = entry.plan.sym_ladder.rows_per_block
+    for b, cap in enumerate(entry.plan.hash_schedule.sym_row_buckets):
+        assert cap == 0 or cap & (cap - 1) == 0          # pow-2 restored
+        if cap and b < len(packs):
+            assert cap % packs[b] == 0                   # pack-aligned
+    r = fresh.execute(A, B)
+    np.testing.assert_allclose(np.asarray(r.C.to_dense()),
+                               np.asarray(spgemm_reference(A, B)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_load_rejects_unknown_version(tmp_path):
+    engine = SpgemmEngine()
+    A, B = _pair(89)
+    engine.execute(A, B)
+    path = str(tmp_path / "plans.json")
+    engine.cache.dump(path)
+    blob = json.load(open(path))
+    blob["version"] = 99
+    json.dump(blob, open(path, "w"))
+    with pytest.raises(ValueError):
+        PlanCache().load(path)
 
 
 def test_shard_spec_union_is_monotone():
