@@ -27,3 +27,15 @@ python benchmarks/bench_engine.py --smoke --method hash --fused
 echo
 echo "== engine smoke benchmark (sharded: partition parity + plan reuse) =="
 python benchmarks/bench_engine.py --smoke --shards 2
+
+echo
+echo "== telemetry gate (traced smoke: schema-valid spans, <5% overhead) =="
+# The trace is schema-validated in-process (validate_chrome_trace) and
+# must contain the full nested span pipeline including the sharded
+# fan-out.  The <5% overhead gate is a same-process A/B (steady tail
+# re-run with tracing on vs off on the same engine) so ambient machine
+# load between separate CI steps can't flake it; the untraced --shards 2
+# smoke above still records the cross-run steady_min_ms baseline printed
+# for the trajectory.
+python benchmarks/bench_engine.py --smoke --shards 2 \
+    --trace /tmp/opsparse_smoke_trace.json

@@ -16,7 +16,11 @@ API and the serving/analytics front-ends:
   executor.py  — :class:`SpgemmEngine`: streaming submit/drain with
                  plan-grouped batching, completion-order finalize, and
                  sharded fan-out; ``execute`` backs ``spgemm()``.
-  stats.py     — trace accounting and per-plan telemetry.
+  stats.py     — trace accounting and registry-backed engine/plan
+                 counters (one source of truth with telemetry.py).
+  telemetry.py — structured spans, metrics registry, ring-buffer event
+                 log, and the JSONL / Chrome trace_event / Prometheus
+                 exporters.
 
 Lifecycle::
 
@@ -39,7 +43,12 @@ from .partition import (ShardSpec, balanced_bounds, clamp_shards,
                         plan_shards, shard_devices)
 from .plan import (HashSchedule, MatrixSig, PlanKey, SpgemmPlan, plan,
                    plan_key)
-from .stats import EngineStats, PlanStats, render, total_traces, traces_for
+from .stats import (EngineStats, PlanStats, plan_label, render,
+                    total_traces, traces_for)
+from .telemetry import (LATENCY_BUCKETS_S, EventLog, MetricsRegistry, Span,
+                        Telemetry, git_rev, prometheus_text,
+                        resolve_telemetry, utc_now_iso,
+                        validate_chrome_trace)
 
 __all__ = [
     "AUTO_SHARDS", "AdaptivePolicy", "PolicyState", "choose_shards",
@@ -48,5 +57,8 @@ __all__ = [
     "default_engine", "reset_default_engine", "ShardSpec", "balanced_bounds",
     "clamp_shards", "plan_shards", "shard_devices", "HashSchedule",
     "MatrixSig", "PlanKey", "SpgemmPlan", "plan", "plan_key", "EngineStats",
-    "PlanStats", "render", "total_traces", "traces_for",
+    "PlanStats", "plan_label", "render", "total_traces", "traces_for",
+    "LATENCY_BUCKETS_S", "EventLog", "MetricsRegistry", "Span", "Telemetry",
+    "git_rev", "prometheus_text", "resolve_telemetry", "utc_now_iso",
+    "validate_chrome_trace",
 ]

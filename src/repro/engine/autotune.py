@@ -208,7 +208,7 @@ class PolicyState:
 # ---------------------------------------------------------------------------
 
 def choose_shards(total_flops: int, nrows: int, devices: int,
-                  policy: AdaptivePolicy) -> int:
+                  policy: AdaptivePolicy, *, telemetry=None) -> int:
     """Shard count from a flop estimate and the device occupancy bound.
 
     Each shard must carry ``min_shard_flops`` to amortize the jitted
@@ -217,22 +217,31 @@ def choose_shards(total_flops: int, nrows: int, devices: int,
     shards concurrently — so tiny products collapse to N=1 (unsharded:
     no merge at all) and large ones saturate the mesh.  All math is host
     Python int: a multi-billion-flop stream must not wrap.
+
+    ``telemetry`` (duck-typed: anything with ``.event``) records the
+    decision and its flop basis in the trace.
     """
     limit = (int(policy.max_shards) if policy.max_shards is not None
              else max(int(devices), 1))
     n = min(limit, int(total_flops) // max(int(policy.min_shard_flops), 1))
-    return clamp_shards(nrows, n)
+    n = clamp_shards(nrows, n)
+    if telemetry is not None:
+        telemetry.event("autotune.choose_shards", shards=n,
+                        total_flops=int(total_flops), devices=int(devices))
+    return n
 
 
 def revise_shards(state: PolicyState, nrows: int, devices: int,
-                  policy: AdaptivePolicy) -> Tuple[PolicyState, bool]:
+                  policy: AdaptivePolicy, *,
+                  telemetry=None) -> Tuple[PolicyState, bool]:
     """Periodic shard-count review over the telemetry window.
 
     Every ``revise_period`` finalized requests, re-decide N from the
     window's mean flops — but only when the mean has left the hysteresis
     band around the decision basis, so a stream hovering near a sizing
     boundary doesn't flap plans (each flip costs a cold call).  Returns
-    ``(state, revised)``; the window resets either way.
+    ``(state, revised)``; the window resets either way.  A revision is
+    recorded on ``telemetry`` (duck-typed) when one fires.
     """
     if state.shard_decision is None or state.flops_calls < policy.revise_period:
         return state, False
@@ -245,6 +254,9 @@ def revise_shards(state: PolicyState, nrows: int, devices: int,
     n = choose_shards(mean, nrows, devices, policy)
     if n == state.shard_decision:
         return dataclasses.replace(state, shard_basis=mean), False
+    if telemetry is not None:
+        telemetry.event("autotune.revise_shards", shards=n,
+                        prev_shards=state.shard_decision, mean_flops=mean)
     return state.with_shard_decision(n, mean), True
 
 

@@ -21,11 +21,12 @@ from typing import Callable, Iterable, Optional, Tuple
 from repro.core.spgemm import SpgemmConfig
 from repro.core.workspace import next_bucket
 
+from . import telemetry as telemetry_mod
 from .autotune import PolicyState
 from .partition import ShardSpec
 from .plan import HashSchedule, MatrixSig, PlanKey, SpgemmPlan
 from .plan import plan as make_plan
-from .stats import PlanStats
+from .stats import PlanStats, plan_label
 
 # v1: pre-adaptive-policy payloads (no ``policy`` blob; hash schedules may
 # predate row packing / fusion, so their sym buckets were never
@@ -48,12 +49,17 @@ class CacheEntry:
 class PlanCache:
     """Thread-safe LRU cache keyed by plan signature."""
 
-    def __init__(self, capacity: int = 64):
+    def __init__(self, capacity: int = 64, *, telemetry=None):
         assert capacity >= 1
         self.capacity = capacity
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        # Lifecycle events (insert/evict/specialize/load) go to the
+        # engine's telemetry ring buffer; the shared NULL handle makes a
+        # bare PlanCache() emit-free without branching at call sites.
+        self.telemetry = (telemetry if telemetry is not None
+                          else telemetry_mod.NULL)
         self._lock = threading.Lock()
         self._entries: "OrderedDict[PlanKey, CacheEntry]" = OrderedDict()
 
@@ -79,9 +85,12 @@ class PlanCache:
         entry = CacheEntry(plan=plan)
         self._entries[plan.signature] = entry
         self._entries.move_to_end(plan.signature)
+        self.telemetry.event("plan_insert", plan=plan_label(plan))
         while len(self._entries) > self.capacity:
-            self._entries.popitem(last=False)
+            _, evicted = self._entries.popitem(last=False)
             self.evictions += 1
+            self.telemetry.event("plan_evict",
+                                 plan=plan_label(evicted.plan))
         return entry
 
     def specialize(self, entry: CacheEntry, plan: SpgemmPlan) -> None:
@@ -90,6 +99,9 @@ class PlanCache:
         with self._lock:
             entry.plan = plan
             entry.executable = None
+        self.telemetry.event("plan_specialize", plan=plan_label(plan),
+                             prod_bucket=plan.prod_bucket,
+                             nnz_bucket=plan.nnz_bucket)
 
     def update_policy(self, entry: CacheEntry, state: "PolicyState") -> None:
         """Swap in updated adaptive-policy state WITHOUT dropping the
@@ -179,6 +191,8 @@ class PlanCache:
                     existing.plan = merged
                     if not policy_only:
                         existing.executable = None
+        self.telemetry.event("plan_cache_load", path=str(path),
+                             n_plans=len(plans))
         return len(plans)
 
     # -- introspection ------------------------------------------------------

@@ -61,6 +61,7 @@ from .cache import CacheEntry, PlanCache
 from .partition import ShardSpec, plan_shards, shard_devices
 from .plan import HashSchedule, MatrixSig, SpgemmPlan, plan as make_plan
 from .stats import EngineStats
+from .telemetry import Span, Telemetry, resolve_telemetry
 
 _exclusive_sum = jax.jit(exclusive_sum_in_place, donate_argnums=0)
 
@@ -74,19 +75,34 @@ _CAPACITY_HEADROOM = 1.25
 
 
 class StepTimer:
-    """Per-step wall-clock instrumentation (blocks only when enabled)."""
+    """Per-step wall-clock instrumentation (blocks only when enabled).
 
-    def __init__(self, enabled: bool):
-        self.enabled = enabled
+    With an ENABLED ``tracer`` each measured step also emits a telemetry
+    span (nested under the tracer's current ``with``-span — the cold
+    ``cold_steps`` span in practice), giving the trace per-kernel-phase
+    attribution on exactly the paths that already host-sync.  The
+    ``timings`` dict keeps its historical block-time-only semantics.
+    """
+
+    def __init__(self, enabled: bool, tracer: Optional[Telemetry] = None,
+                 uid: Optional[int] = None):
+        self.tracer = tracer if (tracer is not None
+                                 and tracer.enabled) else None
+        self.enabled = enabled or self.tracer is not None
+        self.uid = uid
         self.timings: Dict[str, float] = {}
 
     def measure(self, name: str, value):
         """Block on `value` and charge the elapsed time to `name`."""
         if self.enabled:
+            span = (self.tracer.start_span(name, uid=self.uid)
+                    if self.tracer is not None else None)
             t0 = time.perf_counter()
             jax.block_until_ready(value)
             self.timings[name] = self.timings.get(name, 0.0) + (
                 time.perf_counter() - t0)
+            if span is not None:
+                self.tracer.end_span(span)
         return value
 
 
@@ -415,6 +431,8 @@ class _Finished:
     uid: int
     result: SpgemmResult
     auto_entry: Optional[CacheEntry] = None  # AUTO_SHARDS policy entry
+    span: Optional[Span] = None   # open request/shard span (ends at finalize)
+    t0: Optional[float] = None    # dispatch wall-clock (latency histogram)
 
 
 @dataclasses.dataclass
@@ -430,6 +448,7 @@ class _Pending:
     handles: tuple      # (C, total_nprod, total_nnz, sym_binning, num_binning)
     t0: float
     auto_entry: Optional[CacheEntry] = None  # AUTO_SHARDS policy entry
+    span: Optional[Span] = None   # open request/shard span (ends at finalize)
 
 
 @dataclasses.dataclass
@@ -450,6 +469,7 @@ class _ShardedPending:
     config: SpgemmConfig
     t0: float
     auto_entry: Optional[CacheEntry] = None  # AUTO_SHARDS policy entry
+    span: Optional[Span] = None   # open request span (ends at finalize)
 
 
 _Record = Union[_Finished, _Pending, _ShardedPending]
@@ -503,14 +523,23 @@ class SpgemmEngine:
     def __init__(self, config: Optional[SpgemmConfig] = None, *,
                  cache_capacity: int = 64,
                  shards: Union[int, str] = 1, mesh=None,
-                 policy: Optional[AdaptivePolicy] = None):
+                 policy: Optional[AdaptivePolicy] = None,
+                 telemetry: Union[Telemetry, bool, None] = None):
         assert shards == "auto" or shards >= 1, shards
         self.config = config or SpgemmConfig()
         self.shards = shards
         self.mesh = mesh
         self.policy = policy or AdaptivePolicy()
-        self.cache = PlanCache(cache_capacity)
-        self.stats = EngineStats()
+        # Structured tracing/metrics (telemetry.py).  Disabled by default:
+        # spans/events no-op, but the registry still backs EngineStats /
+        # the cache counters, so there is exactly ONE set of numbers.
+        self.telemetry = resolve_telemetry(telemetry)
+        self.cache = PlanCache(cache_capacity, telemetry=self.telemetry)
+        self.stats = EngineStats(registry=self.telemetry.registry)
+        reg = self.telemetry.registry
+        self._hist_request = reg.histogram("opsparse_request_latency_seconds")
+        self._hist_cold = reg.histogram("opsparse_cold_steps_seconds")
+        self._hist_finalize = reg.histogram("opsparse_finalize_seconds")
         self._queue: List[SpgemmRequest] = []
         self._uids = itertools.count()
         # Per-device replicated-B memo for the mesh path.  Streams reuse
@@ -607,36 +636,42 @@ class SpgemmEngine:
             groups.setdefault(key, []).append(req)
         ordered = itertools.chain.from_iterable(groups.values())
 
+        # The drain span parents every request span opened inside it (via
+        # the tracer's thread-local stack), so the Perfetto view groups a
+        # whole batch — including finalizes the completion-order loop
+        # reordered — under one interval.
         results: Dict[int, SpgemmResult] = {}
-        if drain_ordered:
-            inflight: Optional[_Record] = None
-            for req in ordered:
-                rec = self._dispatch(req.uid, req.A, req.B, req.config)
+        with self.telemetry.span("drain", n_requests=len(queue),
+                                 ordered=drain_ordered):
+            if drain_ordered:
+                inflight: Optional[_Record] = None
+                for req in ordered:
+                    rec = self._dispatch(req.uid, req.A, req.B, req.config)
+                    if inflight is not None:
+                        if not isinstance(inflight, _Finished):
+                            self.stats.overlapped += 1  # planned k+1, k ran
+                        results[inflight.uid] = self._finalize(inflight)
+                    inflight = rec
                 if inflight is not None:
-                    if not isinstance(inflight, _Finished):
-                        self.stats.overlapped += 1   # planned k+1 while k ran
                     results[inflight.uid] = self._finalize(inflight)
-                inflight = rec
-            if inflight is not None:
-                results[inflight.uid] = self._finalize(inflight)
-            return results
+                return results
 
-        pending: List[_Record] = []
-        window = max(1, int(window))
-        for req in ordered:
-            # Reap down BEFORE dispatching: appending first would hold
-            # window+1 concurrent dispatches (off-by-one — the window is a
-            # device-memory bound, so the bound must hold at dispatch).
-            while len(pending) >= window:
+            pending: List[_Record] = []
+            window = max(1, int(window))
+            for req in ordered:
+                # Reap down BEFORE dispatching: appending first would hold
+                # window+1 concurrent dispatches (off-by-one — the window
+                # is a device-memory bound, so it must hold at dispatch).
+                while len(pending) >= window:
+                    self._reap_one(pending, results)
+                rec = self._dispatch(req.uid, req.A, req.B, req.config)
+                if any(not isinstance(r, _Finished) for r in pending):
+                    self.stats.overlapped += 1   # planned k+1 while k ran
+                pending.append(rec)
+                self.stats.peak_inflight = max(self.stats.peak_inflight,
+                                               len(pending))
+            while pending:
                 self._reap_one(pending, results)
-            rec = self._dispatch(req.uid, req.A, req.B, req.config)
-            if any(not isinstance(r, _Finished) for r in pending):
-                self.stats.overlapped += 1   # planned k+1 while k ran
-            pending.append(rec)
-            self.stats.peak_inflight = max(self.stats.peak_inflight,
-                                           len(pending))
-        while pending:
-            self._reap_one(pending, results)
         return results
 
     def _reap_one(self, pending: List[_Record],
@@ -658,11 +693,13 @@ class SpgemmEngine:
 
     # -- internals ----------------------------------------------------------
     def _dispatch(self, uid: int, A: CSR, B: CSR, config: SpgemmConfig, *,
-                  _sub: bool = False) -> _Record:
+                  _sub: bool = False,
+                  _parent: Optional[Span] = None) -> _Record:
         assert A.ncols == B.nrows, (A.shape, B.shape)
         if config.shards == AUTO_SHARDS:
             auto_entry, config = self._resolve_auto_shards(A, B, config)
-            rec = self._dispatch(uid, A, B, config, _sub=_sub)
+            rec = self._dispatch(uid, A, B, config, _sub=_sub,
+                                 _parent=_parent)
             rec.auto_entry = auto_entry   # finalize feeds telemetry back
             return rec
         if config.shards > 1:
@@ -674,10 +711,18 @@ class SpgemmEngine:
         if not _sub:       # shard sub-dispatches aren't user requests
             self.stats.requests += 1
         t0 = time.perf_counter()
+        tel = self.telemetry
+        # The request (or, under the sharded fan-out, per-shard) span
+        # stays OPEN across the async dispatch->finalize split: it rides
+        # the record and _finalize closes it after the verify sync.
+        span = tel.start_span("shard" if _sub else "request",
+                              parent=_parent, uid=uid, method=config.method)
         a_sig, b_sig = MatrixSig.of(A), MatrixSig.of(B)
-        entry = self.cache.get((a_sig, b_sig, config))
-        if entry is None:
-            entry = self.cache.insert(make_plan(a_sig, b_sig, config))
+        with tel.span("plan_lookup", parent=span, uid=uid) as lookup:
+            entry = self.cache.get((a_sig, b_sig, config))
+            lookup.set(hit=entry is not None)
+            if entry is None:
+                entry = self.cache.insert(make_plan(a_sig, b_sig, config))
         entry.stats.calls += 1
 
         # Canonicalize operand storage to the signature buckets so every
@@ -692,9 +737,17 @@ class SpgemmEngine:
         if not hot_eligible:
             state = plan.policy or PolicyState(
                 headroom=self.policy.headroom_init)
-            result, prod_cap, nnz_cap, hash_sched = _execute_steps(
-                A, B, plan, StepTimer(config.timing),
-                headroom=state.headroom)
+            # StepTimer carries the tracer, so the six paper steps (setup,
+            # binnings, symbolic, alloc, numeric) emit kernel-phase spans
+            # nested under cold_steps — attribution on exactly the path
+            # that already host-syncs per step.
+            with tel.span("cold_steps", parent=span, uid=uid,
+                          specialized=plan.is_specialized) as cold:
+                result, prod_cap, nnz_cap, hash_sched = _execute_steps(
+                    A, B, plan, StepTimer(config.timing, tracer=tel, uid=uid),
+                    headroom=state.headroom)
+            if tel.enabled:
+                self._hist_cold.observe(cold.dur)
             if not plan.is_specialized:
                 # Progressive allocation: learn the buckets (and, for the
                 # hash method, the launch schedule the run just used) for
@@ -706,19 +759,21 @@ class SpgemmEngine:
                 self.cache.specialize(entry, specialized)
             entry.stats.steps_calls += 1
             entry.stats.time_s += time.perf_counter() - t0
-            return _Finished(uid, result)
+            return _Finished(uid, result, span=span, t0=t0)
 
         if entry.executable is None:
-            if config.method != "hash":
-                builder = _build_hot_executable
-            elif config.fuse_numeric:
-                builder = _build_fused_hash_executable
-            else:
-                builder = _build_hash_executable
-            entry.executable = builder(plan)
-        handles = entry.executable(A, B)         # async dispatch, no sync
+            with tel.span("build_executable", parent=span, uid=uid):
+                if config.method != "hash":
+                    builder = _build_hot_executable
+                elif config.fuse_numeric:
+                    builder = _build_fused_hash_executable
+                else:
+                    builder = _build_hash_executable
+                entry.executable = builder(plan)
+        with tel.span("dispatch", parent=span, uid=uid):
+            handles = entry.executable(A, B)     # async dispatch, no sync
         entry.stats.hot_calls += 1
-        return _Pending(uid, entry, plan, A, B, handles, t0)
+        return _Pending(uid, entry, plan, A, B, handles, t0, span=span)
 
     def _dispatch_sharded(self, uid: int, A: CSR, B: CSR,
                           config: SpgemmConfig) -> _Record:
@@ -734,10 +789,15 @@ class SpgemmEngine:
         self.stats.requests += 1
         self.stats.sharded_requests += 1
         t0 = time.perf_counter()
+        tel = self.telemetry
+        span = tel.start_span("request", uid=uid, method=config.method,
+                              shards=config.shards)
         a_sig, b_sig = MatrixSig.of(A), MatrixSig.of(B)
-        entry = self.cache.get((a_sig, b_sig, config))
-        if entry is None:
-            entry = self.cache.insert(make_plan(a_sig, b_sig, config))
+        with tel.span("plan_lookup", parent=span, uid=uid) as lookup:
+            entry = self.cache.get((a_sig, b_sig, config))
+            lookup.set(hit=entry is not None)
+            if entry is None:
+                entry = self.cache.insert(make_plan(a_sig, b_sig, config))
         entry.stats.calls += 1
 
         spec = entry.plan.shard_spec
@@ -749,14 +809,17 @@ class SpgemmEngine:
             # storage buckets is checked in the finalize sync (an
             # overflowed slice would be silently truncated, which the
             # sub-plans can't detect themselves).
-            flops = row_flops(A, B)            # host int64 (its one sync)
-            rpt = jax.device_get(A.rpt)
-            spec = plan_shards(rpt, flops, config.shards)
-            self.cache.specialize(entry, entry.plan.with_shard_spec(spec))
+            with tel.span("partition", parent=span, uid=uid):
+                flops = row_flops(A, B)        # host int64 (its one sync)
+                rpt = jax.device_get(A.rpt)
+                spec = plan_shards(rpt, flops, config.shards, telemetry=tel)
+                self.cache.specialize(entry,
+                                      entry.plan.with_shard_spec(spec))
 
         if entry.executable is None:
-            entry.executable = _build_merge_executable(
-                spec, m=A.nrows, n=B.ncols)
+            with tel.span("build_executable", parent=span, uid=uid):
+                entry.executable = _build_merge_executable(
+                    spec, m=A.nrows, n=B.ncols)
 
         devices = (shard_devices(self.mesh, spec.n_shards)
                    if self.mesh is not None else None)
@@ -777,10 +840,13 @@ class SpgemmEngine:
                     self._b_placed[dev] = (B if dev in B.val.devices()
                                            else jax.device_put(B, dev))
                 B_s = self._b_placed[dev]
-            shard_recs.append(
-                self._dispatch(uid, A_s, B_s, sub_cfg, _sub=True))
+            rec = self._dispatch(uid, A_s, B_s, sub_cfg, _sub=True,
+                                 _parent=span)
+            if rec.span is not None:
+                rec.span.set(shard=s)
+            shard_recs.append(rec)
         return _ShardedPending(uid, entry, spec, shard_recs, A, B,
-                               config, t0)
+                               config, t0, span=span)
 
     # -- adaptive shard count (AUTO_SHARDS) ---------------------------------
     def _device_count(self) -> int:
@@ -810,7 +876,8 @@ class SpgemmEngine:
             flops = row_flops(A, B)          # host int64 (the one sync)
             total = int(flops.sum())
             n = autotune.choose_shards(total, A.nrows, self._device_count(),
-                                       self.policy)
+                                       self.policy,
+                                       telemetry=self.telemetry)
             state = ((state or PolicyState(headroom=self.policy.headroom_init))
                      .with_shard_decision(n, total))
             self.cache.update_policy(entry, state)
@@ -825,15 +892,27 @@ class SpgemmEngine:
             return
         state = state.note_flops(2 * result.total_nprod)
         state, revised = autotune.revise_shards(
-            state, entry.plan.a_sig.nrows, self._device_count(), self.policy)
+            state, entry.plan.a_sig.nrows, self._device_count(), self.policy,
+            telemetry=self.telemetry)
         if revised:
             self.stats.policy_revisions += 1
         self.cache.update_policy(entry, state)
 
     def _finalize(self, rec: _Record) -> SpgemmResult:
-        result = self._finalize_record(rec)
+        tel = self.telemetry
+        with tel.span("finalize", parent=rec.span, uid=rec.uid) as fin:
+            result = self._finalize_record(rec)
         if rec.auto_entry is not None:
             self._note_auto(rec.auto_entry, result)
+        if tel.enabled:
+            self._hist_finalize.observe(fin.dur)
+            span = rec.span
+            if isinstance(span, Span):
+                # Close the open request/shard span the dispatch left on
+                # the record (idempotent under redo paths).
+                tel.end_span(span)
+                if span.name == "request" and rec.t0 is not None:
+                    self._hist_request.observe(span.t1 - rec.t0)
         return result
 
     def _finalize_record(self, rec: _Record) -> SpgemmResult:
@@ -851,8 +930,9 @@ class SpgemmEngine:
             C, tnp, tnz, sym_binning, num_binning, sym_fall = rec.handles
             # The ONE host sync: totals + sym bin sizes + fallback product
             # (num_binning is telemetry only — no numeric pass to verify).
-            fetched = jax.device_get(
-                (tnp, tnz, sym_binning.bin_size, sym_fall))
+            with self.telemetry.span("verify_sync", uid=rec.uid):
+                fetched = jax.device_get(
+                    (tnp, tnz, sym_binning.bin_size, sym_fall))
             total_nprod, total_nnz = int(fetched[0]), int(fetched[1])
             schedule_ok = plan.hash_schedule.admits_fused(
                 fetched[2], int(fetched[3]))
@@ -867,9 +947,10 @@ class SpgemmEngine:
             (C, tnp, tnz, sym_binning, num_binning,
              sym_fall, num_fall) = rec.handles
             # The ONE host sync: totals + bin sizes + fallback products.
-            fetched = jax.device_get(
-                (tnp, tnz, sym_binning.bin_size, num_binning.bin_size,
-                 sym_fall, num_fall))
+            with self.telemetry.span("verify_sync", uid=rec.uid):
+                fetched = jax.device_get(
+                    (tnp, tnz, sym_binning.bin_size, num_binning.bin_size,
+                     sym_fall, num_fall))
             total_nprod, total_nnz = int(fetched[0]), int(fetched[1])
             schedule_ok = plan.hash_schedule.admits(
                 fetched[2], fetched[3], int(fetched[4]), int(fetched[5]))
@@ -883,8 +964,9 @@ class SpgemmEngine:
                                   num_sizes=fetched[3], num_fall=fetched[5])
         else:
             C, tnp, tnz, sym_binning, num_binning = rec.handles
-            total_nprod, total_nnz = (
-                int(x) for x in jax.device_get((tnp, tnz)))  # ONE host sync
+            with self.telemetry.span("verify_sync", uid=rec.uid):
+                total_nprod, total_nnz = (            # the ONE host sync
+                    int(x) for x in jax.device_get((tnp, tnz)))
             if (total_nprod > plan.prod_bucket
                     or total_nnz > plan.nnz_bucket):
                 return self._grow_and_redo(rec, total_nprod, total_nnz)
@@ -908,14 +990,17 @@ class SpgemmEngine:
         An overflow grows only the offending shard's bucket and redoes
         only that shard."""
         t_fin = time.perf_counter()
+        tel = self.telemetry
         spec = rec.spec
-        slice_nnz = jax.device_get(
-            rec.A.rpt[jnp.asarray(spec.bounds, dtype=jnp.int32)])
+        with tel.span("verify_slices", uid=rec.uid):
+            slice_nnz = jax.device_get(
+                rec.A.rpt[jnp.asarray(spec.bounds, dtype=jnp.int32)])
         sizes = [int(slice_nnz[s + 1]) - int(slice_nnz[s])
                  for s in range(spec.n_shards)]
         overflowed = [s for s in range(spec.n_shards)
                       if sizes[s] > spec.cap_buckets[s]]
         if overflowed:
+            tel.event("shard_grow", uid=rec.uid, shards=tuple(overflowed))
             grown = spec
             for s in overflowed:
                 grown = grown.with_cap_bucket(s, 2 * sizes[s])  # headroom
@@ -932,7 +1017,8 @@ class SpgemmEngine:
                                       nrows=grown.row_buckets[s],
                                       capacity=grown.cap_buckets[s])
                 rec.shard_recs[s] = self._dispatch(
-                    rec.uid, A_s, rec.B, sub_cfg, _sub=True)
+                    rec.uid, A_s, rec.B, sub_cfg, _sub=True,
+                    _parent=rec.span)
         shard_results = [self._finalize(r) for r in rec.shard_recs]
         merge = rec.entry.executable
         if merge is None:     # entry re-specialized while we were in flight
@@ -940,14 +1026,15 @@ class SpgemmEngine:
                 rec.spec, m=rec.spec.bounds[-1], n=rec.B.ncols)
             rec.entry.executable = merge
         parts = tuple(r.C for r in shard_results)
-        if self.mesh is not None:
-            # Mesh placement commits each shard's result to its shard
-            # device; one jitted computation can't mix committed devices,
-            # so gather the parts home before concatenating.
-            home = next(iter(parts[0].val.devices()))
-            parts = tuple(C if C.val.devices() == {home}
-                          else jax.device_put(C, home) for C in parts)
-        C = merge(parts)
+        with tel.span("shard_merge", uid=rec.uid, n_shards=spec.n_shards):
+            if self.mesh is not None:
+                # Mesh placement commits each shard's result to its shard
+                # device; one jitted computation can't mix committed
+                # devices, so gather the parts home first.
+                home = next(iter(parts[0].val.devices()))
+                parts = tuple(C if C.val.devices() == {home}
+                              else jax.device_put(C, home) for C in parts)
+            C = merge(parts)
         timings: Dict[str, float] = {}
         for r in shard_results:
             for k, v in r.timings.items():
@@ -991,6 +1078,8 @@ class SpgemmEngine:
             if trimmed is not None:
                 self.stats.schedule_trims += 1
                 entry.stats.schedule_trims += 1
+                self.telemetry.event("schedule_trim", uid=rec.uid,
+                                     headroom=state.headroom)
                 self.cache.specialize(entry, plan.with_hash_schedule(
                     HashSchedule(*trimmed)).with_policy(state))
                 return
@@ -1011,6 +1100,10 @@ class SpgemmEngine:
         plan = rec.plan
         self.stats.capacity_grows += 1
         rec.entry.stats.capacity_grows += 1
+        tel = self.telemetry
+        tel.event("capacity_grow", uid=rec.uid,
+                  schedule_overflow=schedule_overflow,
+                  total_nprod=total_nprod, total_nnz=total_nnz)
         # NB: an overflowed hot run truncates its expansion (or drops rows
         # past a bin bucket), so its totals are only lower bounds; the
         # steps redo reports the true capacities to respecialize with.
@@ -1029,8 +1122,11 @@ class SpgemmEngine:
         if schedule_overflow:
             state = state.note_overflow(self.policy)
         grown = grown.with_policy(state)
-        result, prod_cap, nnz_cap, hash_sched = _execute_steps(
-            rec.A, rec.B, grown, StepTimer(False), headroom=state.headroom)
+        with tel.span("grow_redo", uid=rec.uid):
+            result, prod_cap, nnz_cap, hash_sched = _execute_steps(
+                rec.A, rec.B, grown,
+                StepTimer(False, tracer=tel, uid=rec.uid),
+                headroom=state.headroom)
         rec.entry.stats.steps_calls += 1   # the redo ran the steps oracle
         respecialized = grown.with_capacities(prod_cap, nnz_cap)
         if hash_sched is not None:

@@ -122,9 +122,14 @@ _SLICE_HEADROOM = 2.0
 
 
 def plan_shards(rpt: np.ndarray, flops: np.ndarray, n_shards: int, *,
-                headroom: float = _SLICE_HEADROOM) -> ShardSpec:
+                headroom: float = _SLICE_HEADROOM,
+                telemetry=None) -> ShardSpec:
     """Derive a :class:`ShardSpec` from host-fetched row pointers and the
-    per-row flop estimate (``core/analysis.row_flops``)."""
+    per-row flop estimate (``core/analysis.row_flops``).
+
+    ``telemetry`` (duck-typed: anything with ``.event``) records the
+    pinned partition — this is the one decision per sharded plan, so the
+    trace should show where the bounds came from."""
     rpt = np.asarray(rpt, dtype=np.int64)
     bounds = balanced_bounds(flops, n_shards)
     row_buckets = tuple(
@@ -134,6 +139,9 @@ def plan_shards(rpt: np.ndarray, flops: np.ndarray, n_shards: int, *,
         next_bucket(max(int((rpt[bounds[s + 1]] - rpt[bounds[s]])
                             * headroom), 1))
         for s in range(len(bounds) - 1))
+    if telemetry is not None:
+        telemetry.event("partition.planned", n_shards=len(row_buckets),
+                        bounds=bounds, cap_buckets=cap_buckets)
     return ShardSpec(bounds=bounds, row_buckets=row_buckets,
                      cap_buckets=cap_buckets)
 

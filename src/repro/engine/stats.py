@@ -1,4 +1,4 @@
-"""Engine telemetry: trace accounting and per-plan counters.
+"""Engine telemetry: trace accounting and registry-backed counters.
 
 The paper reports its systems wins (alloc/exec overlap, metadata
 minimization) through per-step timing breakdowns (§6.3); the engine's
@@ -11,13 +11,24 @@ Trace counting works by side effect: :func:`record_trace` is called in the
 body of each per-plan jitted executable, so it runs exactly once per trace
 (Python executes only while JAX is tracing) — repeat calls that hit the
 compiled executable never touch it.  That gives the tests a direct "zero
-retraces for a repeated shape" observable.
+retraces for a repeated shape" observable.  :func:`reset` clears the
+module-global counters; ``tests/conftest.py`` runs it before every test so
+trace-count assertions can't bleed across test files.
+
+:class:`EngineStats` and :class:`PlanStats` keep their historical field
+API (``stats.requests``, ``entry.stats.hot_calls``, ...) but every field
+is now backed by a counter/gauge in a
+:class:`~repro.engine.telemetry.MetricsRegistry` — the structured
+telemetry layer and the legacy attribute reads see ONE set of numbers,
+and the Prometheus exporter (:func:`repro.engine.telemetry.
+prometheus_text`) renders them without a parallel bookkeeping path.
 """
 from __future__ import annotations
 
-import dataclasses
 from collections import defaultdict
-from typing import Dict
+from typing import Dict, Optional, Tuple
+
+from .telemetry import MetricsRegistry
 
 # -- trace accounting (module-global: jit caches are process-global too) ----
 
@@ -40,41 +51,132 @@ def traces_for(key) -> int:
     return _TRACES.get(key, 0)
 
 
+def reset() -> None:
+    """Zero the process-wide trace counters (test isolation: the autouse
+    fixture in ``tests/conftest.py`` calls this before every test)."""
+    _TRACES.clear()
+    _TOTAL["count"] = 0
+
+
 # -- per-plan / per-engine counters ----------------------------------------
 
-@dataclasses.dataclass
-class PlanStats:
-    """Telemetry for one cached plan."""
-
-    calls: int = 0            # requests executed under this plan
-    hot_calls: int = 0        # served by the jitted steady-state executable
-    steps_calls: int = 0      # served by the host-orchestrated six-step path
-    capacity_grows: int = 0   # bucket overflows that forced a re-plan
-    bin_overflows: int = 0    # hash bin-count/fallback schedule overflows
-    schedule_trims: int = 0   # headroom-policy schedule shrinks (autotune)
-    time_s: float = 0.0       # wall-clock charged to this plan
+def plan_label(plan) -> str:
+    """Compact stable label for one plan (Prometheus label values,
+    telemetry event payloads): shapes, method, and the shard fan-out."""
+    a, b = plan.a_sig, plan.b_sig
+    label = (f"{a.nrows}x{a.ncols}·{b.nrows}x{b.ncols}"
+             f"/{plan.config.method}")
+    if plan.config.shards != 1:
+        label += f"/sh{plan.config.shards}"
+    return label
 
 
-@dataclasses.dataclass
-class EngineStats:
-    """Engine-level counters (cache counters live on the PlanCache)."""
+def _metric_property(field: str):
+    def fget(self):
+        return self._metrics[field].value
 
-    requests: int = 0
-    overlapped: int = 0       # request k+1 planned while k ran on device
-    capacity_grows: int = 0
-    bin_overflows: int = 0    # hash launch-schedule overflows (subset of grows)
-    drains: int = 0
-    sharded_requests: int = 0 # requests fanned out into row-block shards
-    shard_grows: int = 0      # per-shard slice-storage bucket grows
-    reordered: int = 0        # drain() finalizes ahead of dispatch order
-    peak_inflight: int = 0    # max concurrent dispatches a drain() held
-    auto_requests: int = 0    # requests routed through AUTO_SHARDS policy
-    policy_revisions: int = 0 # telemetry-driven shard-count re-decisions
-    schedule_trims: int = 0   # headroom-policy hash-schedule shrinks
+    def fset(self, v):
+        self._metrics[field].value = v
+
+    return property(fget, fset, doc=f"registry-backed '{field}' counter")
+
+
+class _RegistryStats:
+    """Base for stats objects whose fields live in a MetricsRegistry.
+
+    Subclasses declare ``_COUNTERS``/``_GAUGES`` field names plus a
+    metric-name prefix; attribute get/set on those names routes to the
+    registry metric, so ``stats.requests += 1`` and a Prometheus scrape
+    read the same number.  ``_NAMES`` overrides the default
+    ``<prefix><field>_total`` metric naming.
+    """
+
+    _COUNTERS: Tuple[str, ...] = ()
+    _GAUGES: Tuple[str, ...] = ()
+    _PREFIX = "opsparse_"
+    _NAMES: Dict[str, str] = {}
+
+    def __init__(self, registry: Optional[MetricsRegistry] = None):
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self._metrics = {}
+        for field in self._COUNTERS:
+            self._metrics[field] = self.registry.counter(
+                self.metric_name(field))
+        for field in self._GAUGES:
+            self._metrics[field] = self.registry.gauge(
+                self.metric_name(field))
+
+    @classmethod
+    def metric_name(cls, field: str) -> str:
+        name = cls._NAMES.get(field)
+        if name is not None:
+            return name
+        suffix = "_total" if field in cls._COUNTERS else ""
+        return f"{cls._PREFIX}{field}{suffix}"
+
+    def metric(self, field: str):
+        return self._metrics[field]
+
+
+class PlanStats(_RegistryStats):
+    """Telemetry for one cached plan (fields are registry counters).
+
+    calls           requests executed under this plan
+    hot_calls       served by the jitted steady-state executable
+    steps_calls     served by the host-orchestrated six-step path
+    capacity_grows  bucket overflows that forced a re-plan
+    bin_overflows   hash bin-count/fallback schedule overflows
+    schedule_trims  headroom-policy schedule shrinks (autotune)
+    time_s          wall-clock charged to this plan (seconds)
+    """
+
+    _PREFIX = "opsparse_plan_"
+    _COUNTERS = ("calls", "hot_calls", "steps_calls", "capacity_grows",
+                 "bin_overflows", "schedule_trims", "time_s")
+    _NAMES = {"time_s": "opsparse_plan_time_seconds_total"}
+
+
+class EngineStats(_RegistryStats):
+    """Engine-level counters (cache counters live on the PlanCache).
+
+    requests          user-visible requests (shard sub-dispatches excluded)
+    overlapped        request k+1 planned while k ran on device
+    capacity_grows    pow-2 bucket overflows (re-plan + retrace)
+    bin_overflows     hash launch-schedule overflows (subset of grows)
+    drains            drain() invocations
+    sharded_requests  requests fanned out into row-block shards
+    shard_grows       per-shard slice-storage bucket grows
+    reordered         drain() finalizes ahead of dispatch order
+    peak_inflight     max concurrent dispatches a drain() held (gauge)
+    auto_requests     requests routed through AUTO_SHARDS policy
+    policy_revisions  telemetry-driven shard-count re-decisions
+    schedule_trims    headroom-policy hash-schedule shrinks
+    """
+
+    _PREFIX = "opsparse_engine_"
+    _COUNTERS = ("requests", "overlapped", "capacity_grows", "bin_overflows",
+                 "drains", "sharded_requests", "shard_grows", "reordered",
+                 "auto_requests", "policy_revisions", "schedule_trims")
+    _GAUGES = ("peak_inflight",)
+
+
+for _field in PlanStats._COUNTERS + PlanStats._GAUGES:
+    setattr(PlanStats, _field, _metric_property(_field))
+for _field in EngineStats._COUNTERS + EngineStats._GAUGES:
+    setattr(EngineStats, _field, _metric_property(_field))
+del _field
 
 
 def render(engine) -> str:
-    """Human-readable telemetry block for benchmarks/examples."""
+    """Human-readable telemetry block for benchmarks/examples.
+
+    A pure consumer of the structured layer: engine/plan counters come
+    from the registry-backed stats, span/event accounting and latency
+    quantiles from the engine's :class:`~repro.engine.telemetry.
+    Telemetry`.  Defensive against empty state — zero requests, an
+    unspecialized plan (no buckets/policy/schedule), or an empty cache
+    must render, not divide by zero.
+    """
     cache = engine.cache
     s = engine.stats
     lines = [
@@ -95,6 +197,19 @@ def render(engine) -> str:
         "%d schedule trims" % (
             s.auto_requests, s.policy_revisions, s.schedule_trims),
     ]
+    tel = getattr(engine, "telemetry", None)
+    if tel is not None and tel.enabled:
+        spans = sum(1 for e in tel.events.snapshot()
+                    if e.get("type") == "span")
+        lines.append(
+            "telemetry: %d events in ring (%d spans; %d of %d appended "
+            "dropped)" % (len(tel.events), spans, tel.events.dropped,
+                          tel.events.appended))
+        hist = tel.registry.get("opsparse_request_latency_seconds")
+        if hist is not None and getattr(hist, "count", 0):
+            lines.append(
+                "latency: %d finalized requests, mean %.2f ms" % (
+                    hist.count, 1e3 * hist.mean))
     for key, entry in cache.items():
         ps = entry.stats
         p = entry.plan
@@ -116,9 +231,8 @@ def render(engine) -> str:
                 "/".join(str(b) for b in p.shard_spec.bounds),
                 "/".join(str(c) for c in p.shard_spec.cap_buckets))
         lines.append(
-            "  plan %dx%d·%dx%d %s: %d calls (%d hot / %d steps), "
+            "  plan %s: %d calls (%d hot / %d steps), "
             "buckets prod=%s nnz=%s%s, %.1f ms total" % (
-                p.a_sig.nrows, p.a_sig.ncols, p.b_sig.nrows, p.b_sig.ncols,
-                p.config.method, ps.calls, ps.hot_calls, ps.steps_calls,
+                plan_label(p), ps.calls, ps.hot_calls, ps.steps_calls,
                 p.prod_bucket, p.nnz_bucket, sched, ps.time_s * 1e3))
     return "\n".join(lines)

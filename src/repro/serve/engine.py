@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.engine.telemetry import resolve_telemetry
 from repro.models.model import Model
 
 
@@ -35,12 +36,24 @@ class Request:
 
 class ServingEngine:
     def __init__(self, model: Model, params, *, max_batch: int = 4,
-                 max_len: int = 256):
+                 max_len: int = 256, telemetry=None):
         assert not model.cfg.is_encoder, "encoder archs do not serve decode"
         self.model = model
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
+        # Same telemetry layer as the SpGEMM engine: serve spans/latency
+        # histograms land in the registry a /metrics endpoint would
+        # render via ``repro.engine.telemetry.prometheus_text``-style
+        # exposition.  No extra fences: prefill/decode already host-sync
+        # on the argmax token reads the spans wrap.
+        self.telemetry = resolve_telemetry(telemetry)
+        reg = self.telemetry.registry
+        self._ctr_requests = reg.counter("opsparse_serve_requests_total")
+        self._ctr_tokens = reg.counter("opsparse_serve_tokens_total")
+        self._hist_prefill = reg.histogram("opsparse_serve_prefill_seconds")
+        self._hist_decode = reg.histogram(
+            "opsparse_serve_decode_step_seconds")
         self.queue: deque[Request] = deque()
         self.slots: List[Optional[Request]] = [None] * max_batch
         self.pos = np.zeros(max_batch, np.int32)        # per-slot position
@@ -74,10 +87,16 @@ class ServingEngine:
     def _prefill_into_slot(self, i: int, req: Request):
         plen = len(req.prompt)
         assert plen < self.max_len
-        batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None]}
-        logits, caches = self._prefill_one(self.params, batch)
-        tok = int(jnp.argmax(logits[0, -1]))
-        self._write_slot_cache(i, caches)
+        self._ctr_requests.inc()
+        with self.telemetry.span("serve.prefill", uid=req.uid,
+                                 slot=i, prompt_len=plen) as span:
+            batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None]}
+            logits, caches = self._prefill_one(self.params, batch)
+            tok = int(jnp.argmax(logits[0, -1]))   # host sync ends the span
+            self._write_slot_cache(i, caches)
+        if self.telemetry.enabled:
+            self._hist_prefill.observe(span.dur)
+        self._ctr_tokens.inc()
         self.slots[i] = req
         self.pos[i] = plen
         self.last_token[i, 0] = tok
@@ -97,11 +116,19 @@ class ServingEngine:
         self.caches = jax.tree_util.tree_map(copy, self.caches, caches)
 
     def _decode_once(self, results: Dict[int, List[int]]):
-        pos = jnp.asarray(self.pos, jnp.int32)
-        tok = jnp.asarray(self.last_token, jnp.int32)
-        logits, self.caches = self._decode(
-            self.params, tok, self.caches, pos)
-        next_np = np.asarray(jnp.argmax(logits[:, -1], axis=-1))[:, None]
+        active = sum(s is not None for s in self.slots)
+        with self.telemetry.span("serve.decode_step",
+                                 active_slots=active) as span:
+            pos = jnp.asarray(self.pos, jnp.int32)
+            tok = jnp.asarray(self.last_token, jnp.int32)
+            logits, self.caches = self._decode(
+                self.params, tok, self.caches, pos)
+            # np.asarray is the step's existing host sync — the span
+            # boundary rides it rather than adding a fence.
+            next_np = np.asarray(jnp.argmax(logits[:, -1], axis=-1))[:, None]
+        if self.telemetry.enabled:
+            self._hist_decode.observe(span.dur)
+        self._ctr_tokens.inc(active)
         for i, req in enumerate(self.slots):
             if req is None:
                 continue

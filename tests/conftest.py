@@ -5,5 +5,19 @@ import os
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import jax  # noqa: E402
+import pytest  # noqa: E402
 
 jax.config.update("jax_threefry_partitionable", True)
+
+
+@pytest.fixture(autouse=True)
+def _reset_trace_counters():
+    """Zero the module-global trace counters before every test.
+
+    ``repro.engine.stats`` counts hot-path traces process-wide; without
+    this, a trace-count assertion depends on which test files ran first
+    (the isolation bug this fixture fixes).  Imported lazily so test
+    files that never touch the engine don't pay for it."""
+    from repro.engine import stats
+    stats.reset()
+    yield
