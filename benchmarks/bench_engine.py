@@ -34,6 +34,15 @@ fused path is the default, and steady-state latency must be no worse
 than 2x the fixed-2x-headroom baseline previously recorded in
 ``BENCH_engine.json`` by the plain ``--method hash`` run.
 
+``--arena`` (ISSUE 7) gates the shared workspace arena under a memory
+governor: K distinct shape-bucket plans (``--plans``, >= 4) run
+concurrently through interleaved ``submit``/``drain`` windows with the
+governor capped at 0.6x the per-plan-buffer baseline (the bytes K
+private workspaces would pin).  Gates: peak arena bytes <= the cap and
+strictly below the baseline, zero retraces after warmup, and bitwise
+result parity against a fresh uncapped engine.  Records
+``peak_workspace_bytes`` / ``arena_hit_rate`` into the trajectory.
+
 ``--trace PATH`` enables the engine's structured telemetry layer
 (``repro.engine.telemetry``) for the whole run and exports the span log
 as a schema-validated Chrome ``trace_event`` file at PATH (plus a JSONL
@@ -67,8 +76,9 @@ import numpy as np
 from repro.core import (SpgemmConfig, bin_rows_for_ladder, next_bucket,
                         nprod_into_rpt, random_csr, spgemm_reference)
 from repro.core.analysis import exclusive_sum_in_place
-from repro.engine import (AdaptivePolicy, SpgemmEngine, Telemetry, git_rev,
-                          total_traces, utc_now_iso, validate_chrome_trace)
+from repro.engine import (AdaptivePolicy, Arena, MatrixSig, MemoryGovernor,
+                          SpgemmEngine, Telemetry, git_rev, total_traces,
+                          utc_now_iso, validate_chrome_trace)
 from repro.kernels import spgemm_hash
 
 BENCH_JSON = Path(__file__).resolve().parent.parent / "BENCH_engine.json"
@@ -159,6 +169,133 @@ def result_parity(base, res, *, bitwise_val: bool) -> bool:
                    np.asarray(base.C.val)[:nnz]))
 
 
+def _lease_bytes(spec) -> int:
+    """Bucketed bytes one plan's workspace lease pins (the per-plan-
+    buffer baseline sums these: without the arena each plan would hold
+    its own pair for its whole cache lifetime)."""
+    return sum(Arena._bucket_bytes(k) for k in Arena._buckets(spec))
+
+
+def run_arena_gate(args) -> int:
+    """ISSUE 7 acceptance: K distinct shape-bucket plans served
+    concurrently out of one governor-capped arena.
+
+    The per-plan-buffer baseline is what the pre-arena engine pinned:
+    every cached plan holding a private workspace pair sized to its own
+    bucket.  The arena gate runs the same K plans through interleaved
+    submit/drain windows with the governor capped at 0.6x that baseline
+    and requires the measured peak to stay under the cap — lease reuse
+    across requests (and across same-bucket plans) is what makes the
+    window, not the plan count, the working-set bound.
+    """
+    cfg = SpgemmConfig(method=args.method)
+    K, rounds, window = args.plans, 3, 3
+    # Distinct nrows => distinct MatrixSigs => K separate cached plans.
+    pairs = []
+    for i in range(K):
+        m = args.m + 8 * i
+        A = random_csr(jax.random.PRNGKey(2 * i), m, args.k,
+                       avg_nnz_per_row=args.avg)
+        B = random_csr(jax.random.PRNGKey(2 * i + 1), args.k, args.n,
+                       avg_nnz_per_row=args.avg)
+        pairs.append((A, B))
+
+    engine = SpgemmEngine(cfg, arena=Arena())
+    for A, B in pairs:                    # cold (steps) + hot (first lease)
+        engine.execute(A, B)
+        jax.block_until_ready(engine.execute(A, B).C.val)
+
+    entries = [engine.cache.get((MatrixSig.of(A), MatrixSig.of(B), cfg))
+               for A, B in pairs]
+    specs = [e.plan.workspace_spec() for e in entries]
+    assert all(s is not None for s in specs), "unleasable plan in the gate"
+    baseline = sum(_lease_bytes(s) for s in specs)
+    cap = int(0.6 * baseline)
+    engine.governor = MemoryGovernor(cap_bytes=cap)
+    engine.arena.reclaim()               # drop warmup leases: cap must bind
+    engine.arena.reset_peak()
+    hits0 = engine.arena.lease_hits
+    misses0 = engine.arena.lease_misses
+    warm_traces = total_traces()
+
+    last = None
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        uids = [engine.submit(A, B) for A, B in pairs]
+        results = engine.drain(window=window)
+        jax.block_until_ready([results[u].C.val for u in uids])
+        last = [results[u] for u in uids]
+    traffic_s = time.perf_counter() - t0
+    n_reqs = rounds * K
+
+    peak = engine.arena.peak_bytes
+    retraces = total_traces() - warm_traces
+    hits = engine.arena.lease_hits - hits0
+    misses = engine.arena.lease_misses - misses0
+    hit_rate = hits / max(hits + misses, 1)
+
+    # Bitwise parity: an uncapped fresh engine (own arena) must produce
+    # byte-identical results — governor pressure and lease recycling are
+    # not allowed to change a single bit of the output.
+    fresh = SpgemmEngine(cfg, arena=Arena())
+    parity = True
+    for (A, B), res in zip(pairs, last):
+        fresh.execute(A, B)
+        base = fresh.execute(A, B)       # hot path, like the gated stream
+        parity = parity and result_parity(base, res, bitwise_val=True)
+
+    cap_ok = peak <= cap
+    base_ok = peak < baseline
+    print(f"plans:         {K:9d} distinct shape buckets "
+          f"({rounds} rounds, window {window})")
+    print(f"baseline:      {baseline:9d} B  (per-plan private workspaces)")
+    print(f"governor cap:  {cap:9d} B  (0.6x baseline)")
+    print(f"arena peak:    {peak:9d} B  "
+          f"({peak / baseline:.2f}x baseline, "
+          f"{'OK' if cap_ok and base_ok else 'OVER'})")
+    print(f"lease reuse:   {hits:9d} hits / {misses} misses "
+          f"({hit_rate * 100:.1f}% hit rate, "
+          f"{engine.stats.arena_pressure} pressure events)")
+    print(f"hot traces:    {total_traces():9d}  "
+          f"({retraces} after warmup, target 0)")
+    print(f"parity:        {'OK' if parity else 'MISMATCH':>9s}  "
+          f"(capped arena vs fresh engine: nnz/rpt/col/val bitwise)")
+    print(f"traffic:       {traffic_s * 1e3:9.1f} ms for {n_reqs} requests "
+          f"({traffic_s / n_reqs * 1e3:.2f} ms/req)")
+    print()
+    print(engine.report())
+
+    key = f"{args.method}_arena@{args.m}x{args.k}x{args.n}k{K}"
+    record_trajectory(key, {
+        "plans": K,
+        "rounds": rounds,
+        "window": window,
+        "shape": [args.m, args.k, args.n],
+        "baseline_workspace_bytes": baseline,
+        "governor_cap_bytes": cap,
+        "peak_workspace_bytes": peak,
+        "peak_over_baseline": round(peak / baseline, 4),
+        "arena_hit_rate": round(hit_rate, 4),
+        "pressure_events": engine.stats.arena_pressure,
+        "retraces_after_warmup": retraces,
+        "traffic_ms_per_request": round(traffic_s / n_reqs * 1e3, 4),
+        "git_rev": git_rev(BENCH_JSON.parent),
+        "recorded_at": utc_now_iso(),
+    })
+    print(f"trajectory:    {BENCH_JSON.name} <- {key}")
+
+    ok = cap_ok and base_ok and retraces == 0 and parity
+    print()
+    print("PASS" if ok else "FAIL",
+          f"(peak {peak} B vs cap {cap} B / baseline {baseline} B, "
+          f"{retraces} retraces, hit rate {hit_rate * 100:.1f}%"
+          + ("" if cap_ok else ", peak over governor cap")
+          + ("" if base_ok else ", peak not below per-plan baseline")
+          + ("" if parity else ", parity MISMATCH")
+          + ")")
+    return 0 if ok else 1
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
@@ -187,6 +324,14 @@ def main(argv=None):
     ap.add_argument("--shards", type=int, default=1,
                     help="row-block shards per request (partition-aware "
                          "engine; 1 = unsharded)")
+    ap.add_argument("--arena", action="store_true",
+                    help="workspace-arena gate: K distinct shape-bucket "
+                         "plans (--plans) under a governor cap of 0.6x "
+                         "the per-plan-buffer baseline; gates peak bytes, "
+                         "zero retraces, bitwise parity")
+    ap.add_argument("--plans", type=int, default=8,
+                    help="arena gate: number of distinct shape buckets "
+                         "(>= 4)")
     ap.add_argument("--check", action="store_true",
                     help="verify every result against the dense oracle")
     ap.add_argument("--trace", metavar="PATH", default=None,
@@ -214,6 +359,14 @@ def main(argv=None):
         ap.error("--adaptive already runs the fused-by-default config; "
                  "drop --fused (its packing/access gates assume a static "
                  "row_packing setup)")
+    if args.arena:
+        if args.fused or args.adaptive or args.shards > 1:
+            ap.error("--arena is its own gate; drop --fused/--adaptive/"
+                     "--shards")
+        if args.plans < 4:
+            ap.error("--plans must be >= 4 (the gate is about concurrent "
+                     "shape buckets)")
+        return run_arena_gate(args)
 
     stream = build_stream(args.requests, args.m, args.k, args.n, args.avg)
     # --trace flips the engine's telemetry layer on for the WHOLE stream
@@ -470,6 +623,8 @@ def main(argv=None):
         "hit_rate": round(hit_rate, 4),
         "retraces_after_warmup": retraces,
         "drain_ms_per_request": round(drain_s / len(uids) * 1e3, 4),
+        "peak_workspace_bytes": engine.arena.peak_bytes,
+        "arena_hit_rate": round(engine.arena.hit_rate, 4),
         "table_accesses": access,
         "phases_ms": phases_ms,
         "trace_tax": trace_tax,

@@ -29,6 +29,14 @@ echo "== engine smoke benchmark (sharded: partition parity + plan reuse) =="
 python benchmarks/bench_engine.py --smoke --shards 2
 
 echo
+echo "== arena gate (K shape buckets under a governor cap: peak bytes, parity) =="
+# 8 distinct shape-bucket plans share one workspace arena with the
+# governor capped at 0.6x the per-plan-buffer baseline; gates peak
+# workspace bytes <= cap (and strictly below the baseline), zero
+# retraces after warmup, and bitwise parity vs an uncapped engine.
+python benchmarks/bench_engine.py --smoke --arena
+
+echo
 echo "== telemetry gate (traced smoke: schema-valid spans, <5% overhead) =="
 # The trace is schema-validated in-process (validate_chrome_trace) and
 # must contain the full nested span pipeline including the sharded

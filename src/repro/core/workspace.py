@@ -1,4 +1,4 @@
-"""Fused metadata workspace (OpSparse §5.3–§5.4 adaptation).
+"""Fused metadata workspace + shared arena (OpSparse §5.3–§5.5 adaptation).
 
 The paper's metadata (the ``bins`` array, ``bin_size``, ``bin_offset``, the
 max-row-size cell) is summed up and allocated with ONE ``cudaMalloc``; the
@@ -9,12 +9,24 @@ buffer whose shape depends only on (M, NUM_BIN), and **donate** it between
 the symbolic and numeric binning calls so XLA reuses the same HBM block.
 
 Layout (int32 cells):   [ bins : M | bin_size : NB | bin_offset : NB | max : 1 ]
+
+The second half of this module generalizes the discipline across PLANS:
+an :class:`Arena` of pow-2-size-bucketed device buffers that specialized
+plans *lease* at dispatch and return at finalize.  The leased buffers ride
+through each steady-state executable as donated arguments returned as
+outputs, so XLA aliases one HBM block across every request that shares a
+size bucket — the §5.4 alloc/exec-overlap analog, but process-wide instead
+of per-plan.  The arena keeps exact host-side byte accounting (in-use,
+reserved, peak, lease hit/miss) so a memory governor
+(:class:`repro.engine.autotune.MemoryGovernor`) can bound the total and
+degrade gracefully under pressure instead of multiplying buffers per plan.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Tuple
+import threading
+from functools import lru_cache, partial
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -95,3 +107,238 @@ def binning_from_buffer(buf: jax.Array, sizes: jax.Array,
         bin_of_row=classify(sizes, upper),
         max_size=buf[m + 2 * nb],
     )
+
+
+# ---------------------------------------------------------------------------
+# Shared size-bucketed workspace arena (§5.4 alloc/exec overlap, plan-wide).
+# ---------------------------------------------------------------------------
+
+class ArenaPressureError(RuntimeError):
+    """The governor cap left no room for a workspace lease and every
+    degradation rung (reclaim, forced trim, fused->two-pass spill) was
+    exhausted — the caller must apply backpressure (finalize in-flight
+    work to return leases) or raise the cap."""
+
+
+@dataclasses.dataclass(frozen=True)
+class LeaseSpec:
+    """Size class of one plan's leased workspace: an int32 buffer (the
+    expansion's row/col ids) plus a value-dtype buffer (the expansion
+    products), both in pow-2 cell counts so same-bucket plans share the
+    arena's free-list entries (and hence the same HBM blocks)."""
+
+    i32_cells: int
+    val_cells: int
+    val_dtype: str
+
+    @property
+    def nbytes(self) -> int:
+        return (4 * int(self.i32_cells)
+                + jnp.dtype(self.val_dtype).itemsize * int(self.val_cells))
+
+
+class Lease:
+    """One checked-out workspace (a pair of device buffers).
+
+    Lifecycle: ``active`` from :meth:`Arena.acquire` until either
+    :meth:`Arena.release` (buffers rebound to the executable's returned
+    aliases and recycled into the free lists) or :meth:`Arena.forfeit`
+    (cache eviction while in flight: the buffers were donated into a
+    still-running executable, so they are *dropped from accounting*
+    rather than recycled — recycling a donated-away block would hand a
+    dangling buffer to the next plan).
+    """
+
+    __slots__ = ("spec", "i32", "val", "state", "device", "keys")
+
+    def __init__(self, spec: LeaseSpec, i32: jax.Array, val: jax.Array,
+                 device=None, keys=None):
+        self.spec = spec
+        self.i32 = i32
+        self.val = val
+        self.state = "active"
+        self.device = device    # free-list key half: buffers are per-device
+        # Free-list keys, computed once at acquire: release/forfeit sit on
+        # the per-request hot path and must not re-stringify dtypes.
+        self.keys = keys if keys is not None else Arena._buckets(spec, device)
+
+    @property
+    def active(self) -> bool:
+        return self.state == "active"
+
+
+class Arena:
+    """Process-wide pool of pow-2-bucketed workspace buffers.
+
+    Free lists are keyed by ``(dtype, pow-2 cell bucket)``; acquiring a
+    spec whose buckets have idle buffers is a *lease hit* (zero new
+    bytes), otherwise the missing buffers are allocated (a *miss*) and
+    counted against ``bytes_reserved``.  All accounting is host-side
+    Python int (exact, wrap-proof):
+
+      bytes_in_use    bytes leased out right now (dispatch -> finalize)
+      bytes_free      idle bytes parked in the free lists
+      bytes_reserved  in_use + free — what the arena holds in HBM, the
+                      quantity a governor cap bounds
+      peak_bytes      high-water mark of ``bytes_in_use`` (the benchmark
+                      gate's "peak workspace bytes"; :meth:`reset_peak`
+                      re-arms it after warmup)
+
+    Thread-safe; the engine serializes leases per dispatch but caches
+    may force-release (:meth:`forfeit`) from another thread.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._free: Dict[Tuple[str, int], List[jax.Array]] = {}
+        self.bytes_in_use = 0
+        self.bytes_free = 0
+        self.peak_bytes = 0
+        self.lease_hits = 0
+        self.lease_misses = 0
+        self.pressure_events = 0
+
+    # -- introspection ------------------------------------------------------
+    @property
+    def bytes_reserved(self) -> int:
+        return self.bytes_in_use + self.bytes_free
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.lease_hits + self.lease_misses
+        return self.lease_hits / total if total else 0.0
+
+    def reset_peak(self) -> None:
+        with self._lock:
+            self.peak_bytes = self.bytes_in_use
+
+    # -- lease lifecycle ----------------------------------------------------
+    @staticmethod
+    @lru_cache(maxsize=1024)
+    def _buckets(spec: LeaseSpec, device=None):
+        """Free-list keys for a spec (memoized: specs are as few as the
+        cached plans, and dtype stringification is hot-path cost)."""
+        dtype = str(jnp.dtype(spec.val_dtype))
+        return (("int32", next_bucket(max(int(spec.i32_cells), 1)), device),
+                (dtype, next_bucket(max(int(spec.val_cells), 1)), device))
+
+    @staticmethod
+    @lru_cache(maxsize=64)
+    def _bucket_bytes(key) -> int:
+        return jnp.dtype(key[0]).itemsize * key[1]
+
+    def try_acquire(self, spec: LeaseSpec,
+                    cap_bytes: Optional[int] = None,
+                    device=None) -> Optional[Lease]:
+        """Lease a buffer pair, or ``None`` when allocating the missing
+        buffers would push ``bytes_reserved`` past ``cap_bytes``.  A spec
+        fully served from the free lists always succeeds (no new bytes),
+        even over an already-exceeded cap — reuse never makes things
+        worse.  ``device`` pins the buffers (mesh-placed shard operands
+        must share their workspace's device); free lists are per-device,
+        so a buffer never migrates between devices through the pool."""
+        keys = self._buckets(spec, device)
+        with self._lock:
+            free = [self._free.get(k) for k in keys]
+            need_new = sum(self._bucket_bytes(k)
+                           for k, f in zip(keys, free) if not f)
+            if need_new and cap_bytes is not None \
+                    and self.bytes_reserved + need_new > cap_bytes:
+                return None
+            bufs = []
+            for k, f in zip(keys, free):
+                if f:
+                    bufs.append(f.pop())
+                    self.bytes_free -= self._bucket_bytes(k)
+                    self.lease_hits += 1
+                else:
+                    buf = jnp.zeros(k[1], dtype=k[0])
+                    if device is not None:
+                        buf = jax.device_put(buf, device)
+                    bufs.append(buf)
+                    self.lease_misses += 1
+                self.bytes_in_use += self._bucket_bytes(k)
+            self.peak_bytes = max(self.peak_bytes, self.bytes_in_use)
+            return Lease(spec, bufs[0], bufs[1], device=device, keys=keys)
+
+    def acquire(self, spec: LeaseSpec,
+                cap_bytes: Optional[int] = None, device=None) -> Lease:
+        lease = self.try_acquire(spec, cap_bytes, device)
+        if lease is None:
+            raise ArenaPressureError(
+                f"lease of {spec.nbytes} bytes would exceed the governor "
+                f"cap ({cap_bytes} bytes; {self.bytes_reserved} reserved)")
+        return lease
+
+    def release(self, lease: Lease,
+                rebind: Optional[Tuple[jax.Array, jax.Array]] = None) -> None:
+        """Return a lease's buffers to the free lists.
+
+        ``rebind`` is the donation loop's second half: the steady-state
+        executable takes the leased buffers as donated arguments and
+        returns them as outputs (XLA aliases the outputs into the donated
+        blocks), so the *returned* arrays — not the consumed input
+        handles — are what the arena must recycle.  Idempotent, and a
+        no-op for a lease the cache already forfeited."""
+        with self._lock:
+            if not lease.active:
+                return
+            lease.state = "released"
+            if rebind is not None:
+                lease.i32, lease.val = rebind
+            for key, buf in zip(lease.keys, (lease.i32, lease.val)):
+                self._free.setdefault(key, []).append(buf)
+                nbytes = self._bucket_bytes(key)
+                self.bytes_in_use -= nbytes
+                self.bytes_free += nbytes
+
+    def forfeit(self, lease: Lease) -> int:
+        """Drop an in-flight lease from accounting WITHOUT recycling its
+        buffers (cache eviction path: the buffers were donated into an
+        executable that may still be running).  The HBM is returned to
+        the allocator when the executable's outputs are garbage
+        collected; the later :meth:`release` at finalize is a no-op.
+        Returns the bytes dropped."""
+        with self._lock:
+            if not lease.active:
+                return 0
+            lease.state = "forfeited"
+            nbytes = sum(self._bucket_bytes(k) for k in lease.keys)
+            self.bytes_in_use -= nbytes
+            return nbytes
+
+    def reclaim(self) -> int:
+        """Drop every idle free-list buffer (pressure rung 0); returns
+        the bytes released back to the device allocator."""
+        with self._lock:
+            freed = self.bytes_free
+            self._free.clear()
+            self.bytes_free = 0
+            return freed
+
+    def note_pressure(self) -> None:
+        with self._lock:
+            self.pressure_events += 1
+
+
+# The process-wide default arena: every engine that isn't handed an
+# explicit Arena shares this one, so multi-engine (multi-tenant) traffic
+# in one process is memory-bounded TOGETHER — the whole point of the
+# §5.4 generalization.
+_DEFAULT_ARENA: Optional[Arena] = None
+_DEFAULT_ARENA_LOCK = threading.Lock()
+
+
+def default_arena() -> Arena:
+    global _DEFAULT_ARENA
+    with _DEFAULT_ARENA_LOCK:
+        if _DEFAULT_ARENA is None:
+            _DEFAULT_ARENA = Arena()
+        return _DEFAULT_ARENA
+
+
+def reset_default_arena() -> None:
+    """Drop the shared arena (tests that need clean accounting)."""
+    global _DEFAULT_ARENA
+    with _DEFAULT_ARENA_LOCK:
+        _DEFAULT_ARENA = None

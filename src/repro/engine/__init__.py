@@ -33,9 +33,12 @@ Lifecycle::
                  the slice signatures) and a jitted merge concatenation.
 """
 from repro.core.spgemm import AUTO_SHARDS
+from repro.core.workspace import (Arena, ArenaPressureError, Lease,
+                                  LeaseSpec, default_arena,
+                                  reset_default_arena)
 
-from .autotune import (AdaptivePolicy, PolicyState, choose_shards,
-                       revise_shards, trim_schedule)
+from .autotune import (AdaptivePolicy, MemoryGovernor, PolicyState,
+                       choose_shards, revise_shards, trim_schedule)
 from .cache import CacheEntry, PlanCache
 from .executor import (SpgemmEngine, SpgemmRequest, StepTimer,
                        default_engine, reset_default_engine)
@@ -53,6 +56,8 @@ from .telemetry import (LATENCY_BUCKETS_S, EventLog, MetricsRegistry, Span,
 __all__ = [
     "AUTO_SHARDS", "AdaptivePolicy", "PolicyState", "choose_shards",
     "revise_shards", "trim_schedule",
+    "Arena", "ArenaPressureError", "Lease", "LeaseSpec", "MemoryGovernor",
+    "default_arena", "reset_default_arena",
     "CacheEntry", "PlanCache", "SpgemmEngine", "SpgemmRequest", "StepTimer",
     "default_engine", "reset_default_engine", "ShardSpec", "balanced_bounds",
     "clamp_shards", "plan_shards", "shard_devices", "HashSchedule",

@@ -284,10 +284,19 @@ def trim_buckets(maxima: Tuple[int, ...], current: Tuple[int, ...],
 
 
 def trim_fallback(fall_max: int, current: int, headroom: float,
-                  rows_bucket: int) -> int:
-    """Trimmed fallback-expansion capacity (0 when the rung dropped)."""
-    if not rows_bucket or not int(fall_max):
-        return 0 if not rows_bucket else current
+                  active: bool) -> int:
+    """Trimmed fallback-expansion capacity.
+
+    ``active`` says whether any verified rung still uses the fallback
+    expansion (either phase's last bucket nonzero for two-pass plans,
+    sym's alone for fused) — when every fallback rung dropped the
+    capacity drops to 0 (statically absent).  ``fall_max`` is the max of
+    both phases' observed sub-products: the shared bucket must admit
+    whichever phase expands more."""
+    if not active:
+        return 0
+    if not int(fall_max):
+        return current
     return min(current, fallback_capacity_bucket(fall_max,
                                                  headroom=headroom))
 
@@ -298,11 +307,15 @@ def trim_schedule(state: PolicyState, current, *, m: int,
     """Derive the trimmed :class:`HashSchedule` fields from a streak's
     observed maxima, or ``None`` when trimming would change nothing.
 
-    Returns ``(sym_buckets, num_buckets, sym_fall, num_fall)`` tuples
-    ready for ``HashSchedule`` — the caller owns the dataclass to keep
-    this module import-light (plan.py imports us for ``PolicyState``).
-    Fused plans observe (and trim) only the symbolic side — there is no
-    numeric probe pass — so their numeric buckets ride along unchanged.
+    Returns ``(sym_buckets, num_buckets, fall_prod)`` ready for
+    ``HashSchedule`` — the caller owns the dataclass to keep this module
+    import-light (plan.py imports us for ``PolicyState``).  Fused plans
+    observe (and trim) only the symbolic side — there is no numeric
+    probe pass — so their numeric buckets ride along unchanged, and the
+    shared fallback capacity is sized to the max of both phases'
+    observed sub-products (the state keeps them separate so policy
+    serialization and ``note_admit`` call sites are unchanged; they
+    merge only here).
     """
     if state.sym_max is None:
         return None
@@ -310,17 +323,44 @@ def trim_schedule(state: PolicyState, current, *, m: int,
     packs = sym_ladder.rows_per_block if (fused and packed) else None
     sym = trim_buckets(state.sym_max, current.sym_row_buckets, m, headroom,
                        packs)
-    sym_fall = trim_fallback(state.sym_fall_max, current.sym_fall_prod_bucket,
-                             headroom, sym[-1])
     num = current.num_row_buckets
-    num_fall = current.num_fall_prod_bucket
     if not fused and state.num_max is not None:
         num = trim_buckets(state.num_max, num, m, headroom)
-        num_fall = trim_fallback(state.num_fall_max, num_fall, headroom,
-                                 num[-1])
+    active = bool(sym[-1]) or (not fused and bool(num[-1]))
+    fall_max = max(state.sym_fall_max,
+                   0 if fused else state.num_fall_max)
+    fall = trim_fallback(fall_max, current.fall_prod_bucket, headroom, active)
     if (sym == tuple(current.sym_row_buckets)
             and num == tuple(current.num_row_buckets)
-            and sym_fall == current.sym_fall_prod_bucket
-            and num_fall == current.num_fall_prod_bucket):
+            and fall == current.fall_prod_bucket):
         return None
-    return sym, num, sym_fall, num_fall
+    return sym, num, fall
+
+
+# ---------------------------------------------------------------------------
+# Memory governor.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MemoryGovernor:
+    """Bound on total arena bytes with a graceful-degradation ladder.
+
+    ``cap_bytes`` bounds the arena's *reserved* bytes (leased + pooled);
+    ``None`` means unbounded (every lease is granted).  When a lease
+    would exceed the cap the executor walks the ladder, cheapest rung
+    first:
+
+      1. ``Arena.reclaim()`` — drop idle pooled buffers and retry.
+      2. forced headroom trim (``trim_under_pressure``) — re-derive the
+         hash schedule at ``headroom_min`` from the streak's observed
+         maxima, shrinking the plan's lease spec, and retry.
+      3. fused->two-pass spill (``spill_fused``) — route the request
+         through the unleased two-pass oracle path for this call.
+      4. :class:`~repro.core.workspace.ArenaPressureError` — the caller
+         must finalize in-flight work (returning leases) or raise the
+         cap; ``SpgemmEngine.drain`` does exactly that before re-raising.
+    """
+
+    cap_bytes: Optional[int] = None
+    trim_under_pressure: bool = True
+    spill_fused: bool = True

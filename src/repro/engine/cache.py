@@ -13,13 +13,14 @@ releases the underlying compiled program once JAX's own caches let go.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import json
 import threading
 from collections import OrderedDict
-from typing import Callable, Iterable, Optional, Tuple
+from typing import Callable, Iterable, List, Optional, Tuple
 
 from repro.core.spgemm import SpgemmConfig
-from repro.core.workspace import next_bucket
+from repro.core.workspace import Arena, Lease, next_bucket
 
 from . import telemetry as telemetry_mod
 from .autotune import PolicyState
@@ -30,11 +31,14 @@ from .stats import PlanStats, plan_label
 
 # v1: pre-adaptive-policy payloads (no ``policy`` blob; hash schedules may
 # predate row packing / fusion, so their sym buckets were never
-# pack-aligned).  v2 adds the policy blob.  ``load`` accepts both and
-# re-derives pack alignment for fused+packed plans either way — see
-# ``_align_schedule_for_packing``.
-_DUMP_VERSION = 2
-_LOADABLE_VERSIONS = (1, 2)
+# pack-aligned).  v2 adds the policy blob.  v3 merges the per-phase
+# fallback capacities into one shared ``fall_prod_bucket`` — loading a
+# v1/v2 schedule takes the max of its two buckets (monotone: every
+# previously-admitted request stays admitted).  ``load`` accepts all
+# three and re-derives pack alignment for fused+packed plans either way —
+# see ``_align_schedule_for_packing``.
+_DUMP_VERSION = 3
+_LOADABLE_VERSIONS = (1, 2, 3)
 
 
 @dataclasses.dataclass
@@ -44,14 +48,26 @@ class CacheEntry:
     plan: SpgemmPlan
     executable: Optional[Callable] = None   # jitted hot path (ESC or hash)
     stats: PlanStats = dataclasses.field(default_factory=PlanStats)
+    leases: List[Lease] = dataclasses.field(default_factory=list)
+    last_used: int = 0    # monotone LRU stamp (0 = never hit since insert)
 
 
 class PlanCache:
-    """Thread-safe LRU cache keyed by plan signature."""
+    """Thread-safe LRU cache keyed by plan signature.
 
-    def __init__(self, capacity: int = 64, *, telemetry=None):
+    With an ``arena`` attached, eviction is arena-aware: evicting an
+    entry forfeits its outstanding workspace leases (the arena drops
+    their bytes from accounting — the buffers were donated into possibly
+    still-running executables, so they are NOT recycled), and LRU ties
+    (never-hit entries) are broken by arena footprint, evicting the
+    entry holding the most workspace first.
+    """
+
+    def __init__(self, capacity: int = 64, *, telemetry=None,
+                 arena: Optional[Arena] = None):
         assert capacity >= 1
         self.capacity = capacity
+        self.arena = arena
         self.hits = 0
         self.misses = 0
         self.evictions = 0
@@ -61,6 +77,7 @@ class PlanCache:
         self.telemetry = (telemetry if telemetry is not None
                           else telemetry_mod.NULL)
         self._lock = threading.Lock()
+        self._stamp = itertools.count(1)
         self._entries: "OrderedDict[PlanKey, CacheEntry]" = OrderedDict()
 
     # -- lookup ------------------------------------------------------------
@@ -72,6 +89,7 @@ class PlanCache:
                 self.misses += 1
                 return None
             self._entries.move_to_end(key)
+            entry.last_used = next(self._stamp)
             self.hits += 1
             return entry
 
@@ -80,18 +98,65 @@ class PlanCache:
         with self._lock:
             return self._insert_locked(plan)
 
-    def _insert_locked(self, plan: SpgemmPlan) -> CacheEntry:
-        """Insert-and-evict body; caller holds ``self._lock``."""
+    def _footprint(self, entry: CacheEntry) -> int:
+        """Arena bytes this entry answers for: outstanding (in-flight)
+        lease bytes plus the lease its specialized plan would take."""
+        spec = entry.plan.workspace_spec()
+        return (sum(l.spec.nbytes for l in entry.leases if l.active)
+                + (spec.nbytes if spec is not None else 0))
+
+    def _release_entry_locked(self, entry: CacheEntry) -> None:
+        """Drop an evicted entry's compiled artifacts and forfeit its
+        outstanding arena leases (accounting only — the buffers may be
+        inside still-running executables and are never recycled)."""
+        entry.executable = None
+        if self.arena is not None:
+            for lease in entry.leases:
+                self.arena.forfeit(lease)
+        entry.leases.clear()
+
+    def _evict_one_locked(self, protect: Optional[PlanKey] = None) -> None:
+        """Evict the LRU victim; ties (same ``last_used`` — in practice
+        never-hit entries, all stamped 0) go to the largest arena
+        footprint, so capacity pressure frees the most workspace.
+        ``protect`` (the key just inserted) is never the victim."""
+        key = min((k for k in self._entries if k != protect),
+                  key=lambda k: (self._entries[k].last_used,
+                                 -self._footprint(self._entries[k])))
+        evicted = self._entries.pop(key)
+        self._release_entry_locked(evicted)
+        self.evictions += 1
+        self.telemetry.event("plan_evict", plan=plan_label(evicted.plan))
+
+    def _insert_locked(self, plan: SpgemmPlan,
+                       stamp: Optional[int] = None) -> CacheEntry:
+        """Insert-and-evict body; caller holds ``self._lock``.
+
+        Insertion counts as use (matching the OrderedDict LRU order this
+        cache always had); ``stamp`` lets a batch insert (:meth:`load`)
+        give every loaded plan ONE shared stamp, so loaded-but-unused
+        plans are genuine LRU ties and the footprint tie-break decides
+        among them."""
         entry = CacheEntry(plan=plan)
+        entry.last_used = stamp if stamp is not None else next(self._stamp)
         self._entries[plan.signature] = entry
         self._entries.move_to_end(plan.signature)
         self.telemetry.event("plan_insert", plan=plan_label(plan))
         while len(self._entries) > self.capacity:
-            _, evicted = self._entries.popitem(last=False)
-            self.evictions += 1
-            self.telemetry.event("plan_evict",
-                                 plan=plan_label(evicted.plan))
+            self._evict_one_locked(protect=plan.signature)
         return entry
+
+    def evict(self, key: PlanKey) -> bool:
+        """Explicitly evict one entry, forfeiting its arena leases.
+        Returns whether the key was present."""
+        with self._lock:
+            entry = self._entries.pop(key, None)
+            if entry is None:
+                return False
+            self._release_entry_locked(entry)
+            self.evictions += 1
+        self.telemetry.event("plan_evict", plan=plan_label(entry.plan))
+        return True
 
     def specialize(self, entry: CacheEntry, plan: SpgemmPlan) -> None:
         """Swap in a (re)specialized plan; stale executables are dropped
@@ -157,10 +222,11 @@ class PlanCache:
         # overflow-grow must not interleave between our read of an
         # entry's plan and the write-back (lost update would shrink it).
         with self._lock:
+            batch_stamp = next(self._stamp)   # loaded plans tie on LRU age
             for plan in plans:
                 existing = self._entries.get(plan.signature)
                 if existing is None:
-                    self._insert_locked(plan)
+                    self._insert_locked(plan, stamp=batch_stamp)
                     continue
                 merged = existing.plan
                 if plan.prod_bucket is not None:
@@ -213,6 +279,8 @@ class PlanCache:
 
     def clear(self) -> None:
         with self._lock:
+            for entry in self._entries.values():
+                self._release_entry_locked(entry)   # no lease leaks
             self._entries.clear()
 
 
@@ -242,11 +310,16 @@ def _plan_from_json(blob: dict) -> SpgemmPlan:
         plan = plan.with_capacities(blob["prod_bucket"], blob["nnz_bucket"])
     hs = blob.get("hash_schedule")
     if hs is not None:
+        if "fall_prod_bucket" in hs:                  # v3
+            fall = hs["fall_prod_bucket"]
+        else:  # v1/v2 kept per-phase capacities; the shared bucket is
+               # their max (monotone: everything admitted stays admitted)
+            fall = max(hs["sym_fall_prod_bucket"],
+                       hs["num_fall_prod_bucket"])
         plan = plan.with_hash_schedule(HashSchedule(
             sym_row_buckets=tuple(hs["sym_row_buckets"]),
             num_row_buckets=tuple(hs["num_row_buckets"]),
-            sym_fall_prod_bucket=hs["sym_fall_prod_bucket"],
-            num_fall_prod_bucket=hs["num_fall_prod_bucket"]))
+            fall_prod_bucket=int(fall)))
     ss = blob.get("shard_spec")
     if ss is not None:
         plan = plan.with_shard_spec(ShardSpec(
@@ -294,8 +367,7 @@ def _align_schedule_for_packing(plan: SpgemmPlan) -> SpgemmPlan:
         sym_row_buckets=aligned(sched.sym_row_buckets,
                                 packs if fused_packed else None),
         num_row_buckets=aligned(sched.num_row_buckets, None),
-        sym_fall_prod_bucket=sched.sym_fall_prod_bucket,
-        num_fall_prod_bucket=sched.num_fall_prod_bucket)
+        fall_prod_bucket=sched.fall_prod_bucket)
     if aligned_sched == sched:
         return plan
     return plan.with_hash_schedule(aligned_sched)

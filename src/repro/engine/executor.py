@@ -40,7 +40,8 @@ import itertools
 import threading
 import time
 from collections import OrderedDict
-from typing import Callable, Dict, List, Optional, Union
+from functools import partial
+from typing import Callable, Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -52,11 +53,13 @@ from repro.core.binning import bin_rows, bin_rows_for_ladder
 from repro.core.csr import CSR
 from repro.core.spgemm import (AUTO_SHARDS, SpgemmConfig, SpgemmResult,
                                next_bucket)
+from repro.core.workspace import (Arena, ArenaPressureError, Lease,
+                                  default_arena)
 from repro.kernels import spgemm_hash
 from repro.launch.mesh import data_axis_devices
 
 from . import autotune, stats as stats_mod
-from .autotune import AdaptivePolicy, PolicyState
+from .autotune import AdaptivePolicy, MemoryGovernor, PolicyState
 from .cache import CacheEntry, PlanCache
 from .partition import ShardSpec, plan_shards, shard_devices
 from .plan import HashSchedule, MatrixSig, SpgemmPlan, plan as make_plan
@@ -172,7 +175,7 @@ def _execute_steps(A: CSR, B: CSR, plan: SpgemmPlan,
                                        headroom=headroom,
                                        packs=sym_packs),
             sched.sym_row_buckets if sched else None,
-            sched.sym_fall_prod_bucket if sched else 0)
+            sched.fall_prod_bucket if sched else 0)
         nnz_buf, _, _ = spgemm_hash.symbolic_scheduled(
             A, B, sym_binning, sym_ladder,
             row_buckets=sym_buckets, fallback_prod_capacity=sym_fall,
@@ -202,15 +205,17 @@ def _execute_steps(A: CSR, B: CSR, plan: SpgemmPlan,
             *spgemm_hash.host_schedule(A, B, num_binning, num_ladder,
                                        headroom=headroom),
             sched.num_row_buckets if sched else None,
-            sched.num_fall_prod_bucket if sched else 0)
+            sched.fall_prod_bucket if sched else 0)
+        # Both phases share ONE fallback expansion capacity (one arena
+        # bucket per plan): each phase runs with the shared max.
+        fall = max(sym_fall, num_fall)
         C, _, _ = spgemm_hash.numeric_scheduled(
             A, B, rpt, num_binning, num_ladder,
             row_buckets=num_buckets, nnz_capacity=nnz_capacity,
-            fallback_prod_capacity=num_fall,
+            fallback_prod_capacity=fall,
             single_access=config.hash_single_access,
             interpret=config.interpret)
-        hash_sched = HashSchedule(sym_buckets, num_buckets,
-                                  sym_fall, num_fall)
+        hash_sched = HashSchedule(sym_buckets, num_buckets, fall)
     elif config.fuse_esc:
         C = esc.spgemm_fused(A, B, prod_capacity=prod_capacity,
                              nnz_capacity=nnz_capacity)
@@ -229,6 +234,29 @@ def _execute_steps(A: CSR, B: CSR, plan: SpgemmPlan,
 # ---------------------------------------------------------------------------
 # Path 2: the steady-state jitted executable (one trace per plan).
 # ---------------------------------------------------------------------------
+
+def _donate_workspace(body: Callable) -> Callable:
+    """Wrap a steady-state pipeline so it carries an arena lease through
+    the trace: the leased buffers are DONATED into the executable and
+    returned as outputs, so XLA aliases the outputs onto the donated HBM
+    blocks — the same physical workspace serves request after request
+    instead of each dispatch allocating fresh expansion buffers (§5.4's
+    alloc/exec overlap, generalized arena-wide).  The engine rebinds the
+    plan's lease to the RETURNED arrays at finalize (the donated inputs
+    are consumed and must not be touched again)."""
+    @partial(jax.jit, donate_argnums=(2, 3))
+    def run(A: CSR, B: CSR, ws_i32: jax.Array, ws_val: jax.Array):
+        return body(A, B) + (ws_i32, ws_val)
+    return run
+
+
+def _finish_executable(plan: SpgemmPlan, body: Callable) -> Callable:
+    """Jit a builder's pipeline body, threading the arena lease through
+    when the plan holds one (``workspace_spec() is not None``)."""
+    if plan.workspace_spec() is not None:
+        return _donate_workspace(body)
+    return jax.jit(body)
+
 
 def _build_hot_executable(plan: SpgemmPlan) -> Callable:
     """Jit the whole two-phase flow against a specialized plan.
@@ -249,8 +277,7 @@ def _build_hot_executable(plan: SpgemmPlan) -> Callable:
     prod_cap, nnz_cap = plan.prod_bucket, plan.nnz_bucket
     key = plan.signature
 
-    @jax.jit
-    def run(A: CSR, B: CSR):
+    def body(A: CSR, B: CSR):
         stats_mod.record_trace(key)      # fires once per trace (recompile)
         rpt_buf = nprod_into_rpt(A, B)
         nprod = rpt_buf[:m]
@@ -269,7 +296,7 @@ def _build_hot_executable(plan: SpgemmPlan) -> Callable:
                             nnz_capacity=nnz_cap)
         return C, total_nprod, total_nnz, sym_binning, num_binning
 
-    return run
+    return _finish_executable(plan, body)
 
 
 def _build_hash_executable(plan: SpgemmPlan) -> Callable:
@@ -291,8 +318,7 @@ def _build_hash_executable(plan: SpgemmPlan) -> Callable:
     nnz_cap = plan.nnz_bucket
     key = plan.signature
 
-    @jax.jit
-    def run(A: CSR, B: CSR):
+    def body(A: CSR, B: CSR):
         stats_mod.record_trace(key)      # fires once per trace (recompile)
         rpt_buf = nprod_into_rpt(A, B)
         nprod = rpt_buf[:m]
@@ -302,7 +328,7 @@ def _build_hash_executable(plan: SpgemmPlan) -> Callable:
         nnz_buf, sym_fall_prod, _ = spgemm_hash.symbolic_scheduled(
             A, B, sym_binning, sym_ladder,
             row_buckets=sched.sym_row_buckets,
-            fallback_prod_capacity=sched.sym_fall_prod_bucket,
+            fallback_prod_capacity=sched.fall_prod_bucket,
             single_access=config.hash_single_access,
             interpret=config.interpret)
         nnz = nnz_buf[:m]
@@ -310,17 +336,19 @@ def _build_hash_executable(plan: SpgemmPlan) -> Callable:
                                num_bins=num_ladder.num_bins)
         total_nnz = jnp.sum(nnz)
         rpt = exclusive_sum_in_place(nnz_buf)
+        # Both phases expand into the SAME shared fallback capacity (one
+        # arena bucket, one traced expansion shape per plan).
         C, num_fall_prod, _ = spgemm_hash.numeric_scheduled(
             A, B, rpt, num_binning, num_ladder,
             row_buckets=sched.num_row_buckets,
             nnz_capacity=nnz_cap,
-            fallback_prod_capacity=sched.num_fall_prod_bucket,
+            fallback_prod_capacity=sched.fall_prod_bucket,
             single_access=config.hash_single_access,
             interpret=config.interpret)
         return (C, total_nprod, total_nnz, sym_binning, num_binning,
                 sym_fall_prod, num_fall_prod)
 
-    return run
+    return _finish_executable(plan, body)
 
 
 def _build_fused_hash_executable(plan: SpgemmPlan) -> Callable:
@@ -344,8 +372,7 @@ def _build_fused_hash_executable(plan: SpgemmPlan) -> Callable:
     nnz_cap = plan.nnz_bucket
     key = plan.signature
 
-    @jax.jit
-    def run(A: CSR, B: CSR):
+    def body(A: CSR, B: CSR):
         stats_mod.record_trace(key)      # fires once per trace (recompile)
         rpt_buf = nprod_into_rpt(A, B)
         nprod = rpt_buf[:m]
@@ -356,7 +383,7 @@ def _build_fused_hash_executable(plan: SpgemmPlan) -> Callable:
             A, B, sym_binning, sym_ladder,
             row_buckets=sched.sym_row_buckets,
             nnz_capacity=nnz_cap,
-            fallback_prod_capacity=sched.sym_fall_prod_bucket,
+            fallback_prod_capacity=sched.fall_prod_bucket,
             single_access=config.hash_single_access,
             interpret=config.interpret,
             row_packing=config.row_packing)
@@ -369,7 +396,7 @@ def _build_fused_hash_executable(plan: SpgemmPlan) -> Callable:
         return (C, total_nprod, total_nnz, sym_binning, num_binning,
                 sym_fall_prod)
 
-    return run
+    return _finish_executable(plan, body)
 
 
 def _build_merge_executable(spec: ShardSpec, m: int, n: int) -> Callable:
@@ -445,10 +472,12 @@ class _Pending:
                         # entry may be re-specialized while we're in flight
     A: CSR
     B: CSR
-    handles: tuple      # (C, total_nprod, total_nnz, sym_binning, num_binning)
+    handles: tuple      # (C, total_nprod, total_nnz, sym_binning, num_binning
+                        #  [, ...phase scalars][, ws_i32, ws_val when leased])
     t0: float
     auto_entry: Optional[CacheEntry] = None  # AUTO_SHARDS policy entry
     span: Optional[Span] = None   # open request/shard span (ends at finalize)
+    lease: Optional[Lease] = None  # arena workspace checked out at dispatch
 
 
 @dataclasses.dataclass
@@ -524,22 +553,49 @@ class SpgemmEngine:
                  cache_capacity: int = 64,
                  shards: Union[int, str] = 1, mesh=None,
                  policy: Optional[AdaptivePolicy] = None,
-                 telemetry: Union[Telemetry, bool, None] = None):
+                 telemetry: Union[Telemetry, bool, None] = None,
+                 arena: Optional[Arena] = None,
+                 governor: Optional[MemoryGovernor] = None):
         assert shards == "auto" or shards >= 1, shards
         self.config = config or SpgemmConfig()
         self.shards = shards
         self.mesh = mesh
         self.policy = policy or AdaptivePolicy()
+        # Workspace arena + memory governor: by default every engine in
+        # the process shares ONE arena (multi-tenant traffic is bounded
+        # together); pass an explicit Arena for isolation.  The governor
+        # default is unbounded — set ``MemoryGovernor(cap_bytes=...)`` to
+        # turn the degradation ladder on.
+        self.arena = arena if arena is not None else default_arena()
+        self.governor = governor or MemoryGovernor()
         # Structured tracing/metrics (telemetry.py).  Disabled by default:
         # spans/events no-op, but the registry still backs EngineStats /
         # the cache counters, so there is exactly ONE set of numbers.
         self.telemetry = resolve_telemetry(telemetry)
-        self.cache = PlanCache(cache_capacity, telemetry=self.telemetry)
+        self.cache = PlanCache(cache_capacity, telemetry=self.telemetry,
+                               arena=self.arena)
         self.stats = EngineStats(registry=self.telemetry.registry)
         reg = self.telemetry.registry
         self._hist_request = reg.histogram("opsparse_request_latency_seconds")
         self._hist_cold = reg.histogram("opsparse_cold_steps_seconds")
         self._hist_finalize = reg.histogram("opsparse_finalize_seconds")
+        # Arena gauges/counters: snapshot-set from the (possibly shared)
+        # arena's own accounting on every lease transition, so multiple
+        # engines publishing into their own registries agree.
+        self._arena_gauges = {
+            "opsparse_arena_bytes_in_use": reg.gauge(
+                "opsparse_arena_bytes_in_use"),
+            "opsparse_arena_bytes_reserved": reg.gauge(
+                "opsparse_arena_bytes_reserved"),
+            "opsparse_arena_peak_bytes": reg.gauge(
+                "opsparse_arena_peak_bytes"),
+            "opsparse_arena_lease_hits_total": reg.gauge(
+                "opsparse_arena_lease_hits_total"),
+            "opsparse_arena_lease_misses_total": reg.gauge(
+                "opsparse_arena_lease_misses_total"),
+            "opsparse_arena_pressure_events_total": reg.gauge(
+                "opsparse_arena_pressure_events_total"),
+        }
         self._queue: List[SpgemmRequest] = []
         self._uids = itertools.count()
         # Per-device replicated-B memo for the mesh path.  Streams reuse
@@ -646,7 +702,19 @@ class SpgemmEngine:
             if drain_ordered:
                 inflight: Optional[_Record] = None
                 for req in ordered:
-                    rec = self._dispatch(req.uid, req.A, req.B, req.config)
+                    try:
+                        rec = self._dispatch(req.uid, req.A, req.B,
+                                             req.config)
+                    except ArenaPressureError:
+                        # Backpressure: finalize the in-flight record
+                        # (returning its lease) and retry once; with
+                        # nothing in flight the cap is simply too small.
+                        if inflight is None:
+                            raise
+                        results[inflight.uid] = self._finalize(inflight)
+                        inflight = None
+                        rec = self._dispatch(req.uid, req.A, req.B,
+                                             req.config)
                     if inflight is not None:
                         if not isinstance(inflight, _Finished):
                             self.stats.overlapped += 1  # planned k+1, k ran
@@ -664,7 +732,18 @@ class SpgemmEngine:
                 # is a device-memory bound, so it must hold at dispatch).
                 while len(pending) >= window:
                     self._reap_one(pending, results)
-                rec = self._dispatch(req.uid, req.A, req.B, req.config)
+                while True:
+                    try:
+                        rec = self._dispatch(req.uid, req.A, req.B,
+                                             req.config)
+                        break
+                    except ArenaPressureError:
+                        # Backpressure: finalize one in-flight record
+                        # (returning its lease) and retry; with nothing
+                        # in flight the cap is simply too small.
+                        if not pending:
+                            raise
+                        self._reap_one(pending, results)
                 if any(not isinstance(r, _Finished) for r in pending):
                     self.stats.overlapped += 1   # planned k+1 while k ran
                 pending.append(rec)
@@ -692,6 +771,105 @@ class SpgemmEngine:
         return stats_mod.render(self)
 
     # -- internals ----------------------------------------------------------
+    def _update_arena_gauges(self) -> None:
+        """Snapshot the (possibly shared) arena's accounting into this
+        engine's registry gauges.  Called on every lease transition and
+        by ``prometheus_text`` just before rendering, so scrapes see
+        fresh numbers even for engines idle since their last lease."""
+        a = self.arena
+        g = self._arena_gauges
+        g["opsparse_arena_bytes_in_use"].set(a.bytes_in_use)
+        g["opsparse_arena_bytes_reserved"].set(a.bytes_reserved)
+        g["opsparse_arena_peak_bytes"].set(a.peak_bytes)
+        g["opsparse_arena_lease_hits_total"].set(a.lease_hits)
+        g["opsparse_arena_lease_misses_total"].set(a.lease_misses)
+        g["opsparse_arena_pressure_events_total"].set(a.pressure_events)
+
+    def _lease_workspace(self, entry: CacheEntry, uid: int,
+                         device=None) -> Tuple[Optional[Lease], bool]:
+        """Check the plan's workspace out of the arena, walking the
+        governor's degradation ladder under pressure.
+
+        Returns ``(lease, spill)``: ``lease`` is ``None`` for plans with
+        nothing leasable (``workspace_spec() is None``) and under a spill;
+        ``spill=True`` routes THIS call through the unleased two-pass
+        steps path.  Raises :class:`ArenaPressureError` when the ladder is
+        exhausted (``drain`` answers it with backpressure: finalize one
+        in-flight record — returning its lease — then retry)."""
+        spec = entry.plan.workspace_spec()
+        if spec is None:
+            return None, False
+        cap = self.governor.cap_bytes
+        lease = self.arena.try_acquire(spec, cap, device)
+        if lease is None:
+            # rung 0: the cap is binding — count pressure, drop idle
+            # pooled buffers, retry.
+            self.arena.note_pressure()
+            self.stats.arena_pressure += 1
+            self.telemetry.event("arena_pressure", uid=uid,
+                                 want_bytes=spec.nbytes, cap_bytes=cap,
+                                 reserved=self.arena.bytes_reserved)
+            self.arena.reclaim()
+            lease = self.arena.try_acquire(spec, cap, device)
+        if lease is None and self.governor.trim_under_pressure:
+            # rung 1: forced headroom trim — re-derive the hash schedule
+            # at the policy floor from the streak's observed maxima,
+            # shrinking this plan's lease spec (drops the executable for
+            # one rebuild; the trace is against the smaller shapes).
+            plan = entry.plan
+            state = plan.policy
+            if (plan.config.method == "hash" and plan.hash_schedule is not None
+                    and state is not None and state.sym_max is not None):
+                forced = dataclasses.replace(
+                    state, headroom=self.policy.headroom_min)
+                trimmed = autotune.trim_schedule(
+                    forced, plan.hash_schedule, m=plan.a_sig.nrows,
+                    sym_ladder=plan.sym_ladder,
+                    packed=plan.config.row_packing,
+                    fused=plan.config.fuse_numeric, policy=self.policy)
+                if trimmed is not None:
+                    self.stats.arena_trims += 1
+                    entry.stats.schedule_trims += 1
+                    self.telemetry.event("arena_trim", uid=uid)
+                    self.cache.specialize(
+                        entry,
+                        plan.with_hash_schedule(HashSchedule(*trimmed))
+                        .with_policy(forced.after_trim(self.policy)))
+                    spec = entry.plan.workspace_spec()
+                    if spec is None:
+                        return None, False
+                    lease = self.arena.try_acquire(spec, cap, device)
+        if lease is None and self.governor.spill_fused \
+                and entry.plan.config.method == "hash" \
+                and entry.plan.config.fuse_numeric:
+            # rung 2: spill the fused plan to the two-pass steps oracle
+            # for this call — no lease, no arena growth, result parity.
+            # Hash-fused only: an ESC "spill" would still allocate the
+            # same workspace per call, just outside arena accounting.
+            self.stats.arena_spills += 1
+            self.telemetry.event("arena_spill", uid=uid)
+            return None, True
+        if lease is None:
+            # rung 3: refuse — the caller must return leases first.
+            raise ArenaPressureError(
+                f"workspace lease of {spec.nbytes} bytes exceeds the "
+                f"governor cap ({cap} bytes; "
+                f"{self.arena.bytes_reserved} reserved)")
+        self._update_arena_gauges()
+        return lease, False
+
+    def _release_ws(self, rec: "_Pending") -> None:
+        """Finalize-side half of the donation loop: rebind the lease to
+        the workspace arrays the executable RETURNED (the donated inputs
+        were consumed; XLA aliased the outputs onto their blocks) and
+        return them to the arena's free lists."""
+        if rec.lease is not None:
+            lease, rec.lease = rec.lease, None
+            self.arena.release(lease, rebind=rec.handles[-2:])
+            if lease in rec.entry.leases:
+                rec.entry.leases.remove(lease)
+            self._update_arena_gauges()
+
     def _dispatch(self, uid: int, A: CSR, B: CSR, config: SpgemmConfig, *,
                   _sub: bool = False,
                   _parent: Optional[Span] = None) -> _Record:
@@ -761,6 +939,30 @@ class SpgemmEngine:
             entry.stats.time_s += time.perf_counter() - t0
             return _Finished(uid, result, span=span, t0=t0)
 
+        # Check the workspace out of the arena BEFORE touching the
+        # executable: a forced pressure trim re-specializes the entry
+        # (shrinking the traced shapes), so the build below must see the
+        # post-ladder plan.
+        devs = A.val.devices()
+        lease, spill = self._lease_workspace(
+            entry, uid, device=next(iter(devs)) if len(devs) == 1 else None)
+        if spill:
+            # Fused->two-pass spill: this call runs the unleased steps
+            # oracle (bitwise-identical result); the plan and its fused
+            # executable stay cached for when pressure clears.
+            state = entry.plan.policy or PolicyState(
+                headroom=self.policy.headroom_init)
+            with tel.span("arena_spill_steps", parent=span, uid=uid):
+                result, _, _, _ = _execute_steps(
+                    A, B, entry.plan,
+                    StepTimer(config.timing, tracer=tel, uid=uid),
+                    headroom=state.headroom)
+            entry.stats.steps_calls += 1
+            entry.stats.time_s += time.perf_counter() - t0
+            return _Finished(uid, result, span=span, t0=t0)
+        plan = entry.plan
+        if lease is not None:
+            entry.leases.append(lease)   # eviction forfeits outstanding ones
         if entry.executable is None:
             with tel.span("build_executable", parent=span, uid=uid):
                 if config.method != "hash":
@@ -771,9 +973,13 @@ class SpgemmEngine:
                     builder = _build_hash_executable
                 entry.executable = builder(plan)
         with tel.span("dispatch", parent=span, uid=uid):
-            handles = entry.executable(A, B)     # async dispatch, no sync
+            if lease is None:
+                handles = entry.executable(A, B)   # async dispatch, no sync
+            else:
+                handles = entry.executable(A, B, lease.i32, lease.val)
         entry.stats.hot_calls += 1
-        return _Pending(uid, entry, plan, A, B, handles, t0, span=span)
+        return _Pending(uid, entry, plan, A, B, handles, t0, span=span,
+                        lease=lease)
 
     def _dispatch_sharded(self, uid: int, A: CSR, B: CSR,
                           config: SpgemmConfig) -> _Record:
@@ -840,8 +1046,18 @@ class SpgemmEngine:
                     self._b_placed[dev] = (B if dev in B.val.devices()
                                            else jax.device_put(B, dev))
                 B_s = self._b_placed[dev]
-            rec = self._dispatch(uid, A_s, B_s, sub_cfg, _sub=True,
-                                 _parent=span)
+            try:
+                rec = self._dispatch(uid, A_s, B_s, sub_cfg, _sub=True,
+                                     _parent=span)
+            except ArenaPressureError:
+                # Unwind the fan-out: finalize the shards already in
+                # flight so their leases return, then re-raise — drain's
+                # backpressure handler redispatches the whole request.
+                for r in shard_recs:
+                    self._finalize(r)
+                if tel.enabled and isinstance(span, Span):
+                    tel.end_span(span)
+                raise
             if rec.span is not None:
                 rec.span.set(shard=s)
             shard_recs.append(rec)
@@ -926,13 +1142,16 @@ class SpgemmEngine:
         # actually executed with, and passing its check would return a
         # silently truncated C.
         plan = rec.plan
+        handles = (rec.handles[:-2] if rec.lease is not None
+                   else rec.handles)   # the lease rides as the last pair
         if plan.config.method == "hash" and plan.config.fuse_numeric:
-            C, tnp, tnz, sym_binning, num_binning, sym_fall = rec.handles
+            C, tnp, tnz, sym_binning, num_binning, sym_fall = handles
             # The ONE host sync: totals + sym bin sizes + fallback product
             # (num_binning is telemetry only — no numeric pass to verify).
             with self.telemetry.span("verify_sync", uid=rec.uid):
                 fetched = jax.device_get(
                     (tnp, tnz, sym_binning.bin_size, sym_fall))
+            self._release_ws(rec)    # sync done: the workspace is idle
             total_nprod, total_nnz = int(fetched[0]), int(fetched[1])
             schedule_ok = plan.hash_schedule.admits_fused(
                 fetched[2], int(fetched[3]))
@@ -945,12 +1164,13 @@ class SpgemmEngine:
             self._note_hash_admit(rec, fetched[2], fetched[3])
         elif plan.config.method == "hash":
             (C, tnp, tnz, sym_binning, num_binning,
-             sym_fall, num_fall) = rec.handles
+             sym_fall, num_fall) = handles
             # The ONE host sync: totals + bin sizes + fallback products.
             with self.telemetry.span("verify_sync", uid=rec.uid):
                 fetched = jax.device_get(
                     (tnp, tnz, sym_binning.bin_size, num_binning.bin_size,
                      sym_fall, num_fall))
+            self._release_ws(rec)    # sync done: the workspace is idle
             total_nprod, total_nnz = int(fetched[0]), int(fetched[1])
             schedule_ok = plan.hash_schedule.admits(
                 fetched[2], fetched[3], int(fetched[4]), int(fetched[5]))
@@ -963,10 +1183,11 @@ class SpgemmEngine:
             self._note_hash_admit(rec, fetched[2], fetched[4],
                                   num_sizes=fetched[3], num_fall=fetched[5])
         else:
-            C, tnp, tnz, sym_binning, num_binning = rec.handles
+            C, tnp, tnz, sym_binning, num_binning = handles
             with self.telemetry.span("verify_sync", uid=rec.uid):
                 total_nprod, total_nnz = (            # the ONE host sync
                     int(x) for x in jax.device_get((tnp, tnz)))
+            self._release_ws(rec)    # sync done: the workspace is idle
             if (total_nprod > plan.prod_bucket
                     or total_nnz > plan.nnz_bucket):
                 return self._grow_and_redo(rec, total_nprod, total_nnz)

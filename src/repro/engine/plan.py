@@ -24,7 +24,7 @@ from typing import Optional, Tuple
 from repro.core.binning_ranges import BinLadder
 from repro.core.csr import CSR
 from repro.core.spgemm import SpgemmConfig, next_bucket
-from repro.core.workspace import WorkspacePlan
+from repro.core.workspace import LeaseSpec, WorkspacePlan
 
 from .autotune import PolicyState
 from .partition import ShardSpec
@@ -77,8 +77,7 @@ class HashSchedule:
 
     sym_row_buckets: Tuple[int, ...]
     num_row_buckets: Tuple[int, ...]
-    sym_fall_prod_bucket: int
-    num_fall_prod_bucket: int
+    fall_prod_bucket: int   # one shared sym/num fallback expansion capacity
 
     def union(self, other: "HashSchedule") -> "HashSchedule":
         """Elementwise max — schedules only ever grow (progressive
@@ -90,22 +89,22 @@ class HashSchedule:
             num_row_buckets=tuple(
                 max(a, b) for a, b in zip(self.num_row_buckets,
                                           other.num_row_buckets)),
-            sym_fall_prod_bucket=max(self.sym_fall_prod_bucket,
-                                     other.sym_fall_prod_bucket),
-            num_fall_prod_bucket=max(self.num_fall_prod_bucket,
-                                     other.num_fall_prod_bucket),
+            fall_prod_bucket=max(self.fall_prod_bucket,
+                                 other.fall_prod_bucket),
         )
 
     def admits(self, sym_bin_sizes, num_bin_sizes, sym_fall_prod: int,
                num_fall_prod: int) -> bool:
         """Whether an executed run's observed bin metadata fit the static
         schedule it was dispatched with (rows beyond a bucket — or
-        fallback products beyond their capacity — were truncated)."""
+        fallback products beyond their capacity — were truncated).  Both
+        phases share ``fall_prod_bucket`` (one arena bucket, one traced
+        expansion shape), so the bound is on their max."""
         return (
             self.admits_fused(sym_bin_sizes, sym_fall_prod)
             and all(int(s) <= b for s, b in zip(num_bin_sizes,
                                                 self.num_row_buckets))
-            and int(num_fall_prod) <= self.num_fall_prod_bucket)
+            and int(num_fall_prod) <= self.fall_prod_bucket)
 
     def admits_fused(self, sym_bin_sizes, sym_fall_prod: int) -> bool:
         """Fused-pipeline admission (``SpgemmConfig.fuse_numeric``): the
@@ -117,7 +116,7 @@ class HashSchedule:
         return (
             all(int(s) <= b for s, b in zip(sym_bin_sizes,
                                             self.sym_row_buckets))
-            and int(sym_fall_prod) <= self.sym_fall_prod_bucket)
+            and int(sym_fall_prod) <= self.fall_prod_bucket)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -202,6 +201,30 @@ class SpgemmPlan:
     def admits(self, A: CSR, B: CSR) -> bool:
         """Whether (A, B) land in this plan's shape buckets."""
         return MatrixSig.of(A) == self.a_sig and MatrixSig.of(B) == self.b_sig
+
+    def workspace_spec(self) -> Optional[LeaseSpec]:
+        """Size class of the arena lease this plan's steady state wants,
+        or ``None`` when the plan allocates nothing leasable: not yet
+        specialized, a sharded parent (leases live on the per-shard
+        sub-plans), or a hash plan whose fallback rung is statically
+        absent (``fall_prod_bucket == 0`` — nothing to expand).
+
+        ESC leases the intermediate-product expansion (row ids + col ids
+        as one int32 buffer, values separately); hash plans lease the
+        fallback rung's sub-expansion with the same 2:1 int32:value cell
+        split.  Both phases of a two-pass hash plan share ONE lease —
+        the shared ``fall_prod_bucket`` is what makes that sound."""
+        if not self.is_specialized or self.config.shards > 1:
+            return None
+        dtype = self.a_sig.dtype
+        if self.config.method == "hash":
+            fall = self.hash_schedule.fall_prod_bucket
+            if not fall:
+                return None
+            return LeaseSpec(i32_cells=2 * fall, val_cells=fall,
+                             val_dtype=dtype)
+        return LeaseSpec(i32_cells=2 * self.prod_bucket,
+                         val_cells=self.prod_bucket, val_dtype=dtype)
 
 
 def plan(a_sig: MatrixSig, b_sig: MatrixSig,

@@ -151,12 +151,16 @@ class EngineStats(_RegistryStats):
     auto_requests     requests routed through AUTO_SHARDS policy
     policy_revisions  telemetry-driven shard-count re-decisions
     schedule_trims    headroom-policy hash-schedule shrinks
+    arena_pressure    governor-cap lease refusals (degradation entered)
+    arena_trims       forced headroom trims under arena pressure
+    arena_spills      fused calls spilled to the unleased two-pass path
     """
 
     _PREFIX = "opsparse_engine_"
     _COUNTERS = ("requests", "overlapped", "capacity_grows", "bin_overflows",
                  "drains", "sharded_requests", "shard_grows", "reordered",
-                 "auto_requests", "policy_revisions", "schedule_trims")
+                 "auto_requests", "policy_revisions", "schedule_trims",
+                 "arena_pressure", "arena_trims", "arena_spills")
     _GAUGES = ("peak_inflight",)
 
 
@@ -197,6 +201,15 @@ def render(engine) -> str:
         "%d schedule trims" % (
             s.auto_requests, s.policy_revisions, s.schedule_trims),
     ]
+    arena = getattr(engine, "arena", None)
+    if arena is not None:
+        lines.append(
+            "arena: %d B in use / %d B reserved (peak %d B), "
+            "%d hits / %d misses, %d pressure events "
+            "(%d trims, %d spills)" % (
+                arena.bytes_in_use, arena.bytes_reserved, arena.peak_bytes,
+                arena.lease_hits, arena.lease_misses, arena.pressure_events,
+                s.arena_trims, s.arena_spills))
     tel = getattr(engine, "telemetry", None)
     if tel is not None and tel.enabled:
         spans = sum(1 for e in tel.events.snapshot()

@@ -573,6 +573,14 @@ def prometheus_text(engine) -> str:
     """
     tel = engine.telemetry
     cache = engine.cache
+    # Arena gauges (opsparse_arena_bytes_in_use, _bytes_reserved,
+    # _peak_bytes, _lease_{hits,misses}_total, _pressure_events_total)
+    # are snapshot-set from the shared arena's accounting; refresh them
+    # so a scrape of an engine idle since its last lease sees current
+    # numbers, not lease-transition-time ones.
+    refresh = getattr(engine, "_update_arena_gauges", None)
+    if refresh is not None:
+        refresh()
     lines = tel.registry.render_lines()
 
     lines += [

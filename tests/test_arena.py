@@ -1,0 +1,352 @@
+"""Workspace arena, memory governor, and lease-lifecycle tests.
+
+Covers the §5.3/§5.4 generalization: the process-wide size-bucketed
+arena plans lease workspace from at dispatch (buffers donated through
+the steady-state jit, returned/rebound at finalize), the governor's
+degradation ladder (reclaim -> forced headroom trim -> fused two-pass
+spill -> backpressure), arena-aware cache eviction (forfeit, no leak),
+and dump/load rebinding loaded plans to the live arena.
+"""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import SpgemmConfig, random_csr
+from repro.core.spgemm import spgemm_reference
+from repro.engine import (Arena, ArenaPressureError, HashSchedule, LeaseSpec,
+                          MatrixSig, MemoryGovernor, SpgemmEngine,
+                          total_traces)
+
+
+def _pair(seed, m=32, k=28, n=36, da=3.0, db=3.0, dist="uniform"):
+    A = random_csr(jax.random.PRNGKey(seed), m, k, avg_nnz_per_row=da,
+                   distribution=dist)
+    B = random_csr(jax.random.PRNGKey(seed + 1), k, n, avg_nnz_per_row=db,
+                   distribution=dist)
+    return A, B
+
+
+@pytest.fixture(scope="module")
+def heavy_pair():
+    """A pair dense enough that hash plans carry a nonzero fallback
+    bucket (rows overflowing the largest hash rung) — the hash lease."""
+    return _pair(51, 32, 1024, 768, 80.0, 64.0, dist="powerlaw")
+
+
+def _check(result, A, B):
+    np.testing.assert_allclose(np.asarray(result.C.to_dense()),
+                               np.asarray(spgemm_reference(A, B)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def _lease_bytes(spec):
+    return sum(Arena._bucket_bytes(k) for k in Arena._buckets(spec))
+
+
+# ---------------------------------------------------------------------------
+# Arena unit accounting.
+# ---------------------------------------------------------------------------
+
+def test_arena_accounting_roundtrip():
+    ar = Arena()
+    spec = LeaseSpec(i32_cells=100, val_cells=50, val_dtype="float32")
+    nbytes = _lease_bytes(spec)          # pow-2 buckets: 128 + 64 cells
+    assert nbytes == 4 * 128 + 4 * 64
+
+    l1 = ar.acquire(spec)
+    assert l1.active
+    assert ar.bytes_in_use == ar.bytes_reserved == ar.peak_bytes == nbytes
+    assert (ar.lease_misses, ar.lease_hits) == (2, 0)
+
+    ar.release(l1)
+    assert not l1.active
+    assert ar.bytes_in_use == 0 and ar.bytes_free == nbytes
+    ar.release(l1)                       # idempotent
+    assert ar.bytes_free == nbytes
+
+    l2 = ar.acquire(spec)                # same buckets -> pure free-list hit
+    assert (ar.lease_misses, ar.lease_hits) == (2, 2)
+    assert ar.bytes_reserved == nbytes == ar.peak_bytes
+    assert ar.hit_rate == 0.5
+    ar.release(l2)
+
+    assert ar.reclaim() == nbytes
+    assert ar.bytes_reserved == 0
+    assert ar.peak_bytes == nbytes       # high-water mark survives reclaim
+    ar.reset_peak()
+    assert ar.peak_bytes == 0
+
+
+def test_arena_cap_binds_new_bytes_only():
+    ar = Arena()
+    spec = LeaseSpec(i32_cells=64, val_cells=64, val_dtype="float32")
+    nbytes = _lease_bytes(spec)
+    assert ar.try_acquire(spec, cap_bytes=nbytes - 1) is None
+    lease = ar.acquire(spec, cap_bytes=nbytes)
+    ar.release(lease)
+    # A spec fully served from the free lists always succeeds, even over
+    # an already-exceeded cap — reuse never adds bytes.
+    assert ar.try_acquire(spec, cap_bytes=0) is not None
+    with pytest.raises(ArenaPressureError):
+        ar.acquire(LeaseSpec(4096, 4096, "float32"), cap_bytes=nbytes)
+
+
+def test_forfeit_drops_accounting_without_recycling():
+    ar = Arena()
+    spec = LeaseSpec(i32_cells=64, val_cells=64, val_dtype="float32")
+    lease = ar.acquire(spec)
+    nbytes = ar.bytes_in_use
+    assert ar.forfeit(lease) == nbytes
+    assert ar.bytes_in_use == 0
+    assert ar.bytes_free == 0            # buffers NOT recycled
+    assert ar.forfeit(lease) == 0        # idempotent
+    ar.release(lease)                    # late finalize: no-op
+    assert ar.bytes_free == 0 and ar.bytes_in_use == 0
+
+
+def test_lease_rebind_recycles_the_returned_arrays():
+    ar = Arena()
+    spec = LeaseSpec(i32_cells=64, val_cells=64, val_dtype="float32")
+    lease = ar.acquire(spec)
+    new_i32 = jax.numpy.ones(128, dtype="int32")
+    new_val = jax.numpy.ones(64, dtype="float32")
+    ar.release(lease, rebind=(new_i32, new_val))
+    relent = ar.acquire(spec)            # hit: must hand back the rebinds
+    assert relent.i32 is new_i32 and relent.val is new_val
+
+
+# ---------------------------------------------------------------------------
+# Engine steady state: leases reused, zero retraces, gauges fresh.
+# ---------------------------------------------------------------------------
+
+def test_steady_state_reuses_one_lease_without_retrace():
+    A, B = _pair(61)
+    ar = Arena()
+    eng = SpgemmEngine(SpgemmConfig(method="esc"), arena=ar)
+    eng.execute(A, B)                    # cold: steps path, no lease
+    assert ar.bytes_reserved == 0
+    _check(eng.execute(A, B), A, B)      # first hot call allocates the lease
+    assert ar.lease_misses == 2 and ar.bytes_in_use == 0
+    nbytes = ar.bytes_reserved
+    assert nbytes > 0
+
+    t0, misses0 = total_traces(), ar.lease_misses
+    for _ in range(4):
+        _check(eng.execute(A, B), A, B)
+    assert total_traces() == t0          # donation didn't retrace
+    assert ar.lease_misses == misses0    # every lease a free-list hit
+    assert ar.lease_hits == 8
+    assert ar.bytes_reserved == nbytes   # one parked lease, not five
+    assert ar.bytes_in_use == 0
+
+    from repro.engine import prometheus_text
+    text = prometheus_text(eng)
+    assert f"opsparse_arena_bytes_reserved {nbytes}" in text
+    assert f"opsparse_arena_peak_bytes {nbytes}" in text
+    assert "opsparse_arena_lease_hits_total 8" in text
+
+
+# ---------------------------------------------------------------------------
+# Governor degradation ladder.
+# ---------------------------------------------------------------------------
+
+def test_governor_backpressure_when_ladder_exhausted():
+    A, B = _pair(63)
+    ar = Arena()
+    eng = SpgemmEngine(SpgemmConfig(method="esc"), arena=ar,
+                       governor=MemoryGovernor(cap_bytes=0))
+    eng.execute(A, B)                    # cold steps path needs no lease
+    # ESC has no trim (hash-only) or spill (fused-only) rung: refuse.
+    with pytest.raises(ArenaPressureError):
+        eng.execute(A, B)
+    assert eng.stats.arena_pressure >= 1
+    assert ar.pressure_events >= 1
+    assert ar.bytes_in_use == 0          # nothing leaked on the way out
+
+
+def test_drain_backpressure_caps_peak_at_one_lease():
+    A, B = _pair(65)
+    ar = Arena()
+    eng = SpgemmEngine(SpgemmConfig(method="esc"), arena=ar)
+    eng.execute(A, B)
+    eng.execute(A, B)                    # steady: one lease parked
+    cap = ar.bytes_reserved
+    eng.governor = MemoryGovernor(cap_bytes=cap)
+    ar.reset_peak()
+
+    uids = [eng.submit(A, B) for _ in range(5)]
+    results = eng.drain(window=4)
+    assert set(results) == set(uids)
+    for uid in uids:
+        _check(results[uid], A, B)
+    # Backpressure finalized in-flight records instead of allocating:
+    # the peak never exceeded the single-lease cap.
+    assert ar.peak_bytes <= cap
+    assert eng.stats.arena_pressure >= 1
+    assert ar.bytes_in_use == 0
+
+    # Ordered drain walks the same ladder.
+    uids = [eng.submit(A, B) for _ in range(3)]
+    results = eng.drain(drain_ordered=True)
+    for uid in uids:
+        _check(results[uid], A, B)
+    assert ar.peak_bytes <= cap
+
+
+def test_governor_forced_trim_shrinks_lease(heavy_pair):
+    A, B = heavy_pair
+    cfg = SpgemmConfig(method="hash")
+    ar = Arena()
+    eng = SpgemmEngine(cfg, arena=ar)
+    eng.execute(A, B)
+    eng.execute(A, B)
+    entry = eng.cache.get((MatrixSig.of(A), MatrixSig.of(B), cfg))
+    sched = entry.plan.hash_schedule
+    assert sched.fall_prod_bucket > 0    # fallback rows present (the lease)
+    cap = ar.bytes_reserved              # exactly the steady-state lease
+
+    # Inflate the fallback bucket 4x, as if the schedule had been sized
+    # by a much larger union partner, then cap the arena at the honest
+    # size: rung 1 must re-derive the schedule from the streak's observed
+    # maxima and fit back under the cap.
+    eng.cache.specialize(entry, entry.plan.with_hash_schedule(HashSchedule(
+        sched.sym_row_buckets, sched.num_row_buckets,
+        4 * sched.fall_prod_bucket)))
+    eng.governor = MemoryGovernor(cap_bytes=cap)
+    _check(eng.execute(A, B), A, B)
+    assert eng.stats.arena_trims == 1
+    assert entry.plan.hash_schedule.fall_prod_bucket < 4 * sched.fall_prod_bucket
+    assert _lease_bytes(entry.plan.workspace_spec()) <= cap
+
+    # Post-trim steady state: no further pressure.
+    pressure = eng.stats.arena_pressure
+    _check(eng.execute(A, B), A, B)
+    assert eng.stats.arena_pressure == pressure
+
+
+def test_governor_spills_fused_to_two_pass(heavy_pair):
+    A, B = heavy_pair
+    cfg = SpgemmConfig(method="hash", fuse_numeric=True)
+    ar = Arena()
+    eng = SpgemmEngine(cfg, arena=ar)
+    eng.execute(A, B)
+    eng.execute(A, B)
+    entry = eng.cache.get((MatrixSig.of(A), MatrixSig.of(B), cfg))
+    assert entry.plan.workspace_spec() is not None
+
+    eng.governor = MemoryGovernor(cap_bytes=0, trim_under_pressure=False)
+    ar.reclaim()                         # park nothing: the cap must bind
+    spilled = eng.execute(A, B)          # rung 2: unleased two-pass oracle
+    assert eng.stats.arena_spills == 1
+    assert ar.bytes_in_use == 0
+    _check(spilled, A, B)
+    # The fused executable stays cached for when pressure clears.
+    assert entry.executable is not None
+    eng.governor = MemoryGovernor()
+    _check(eng.execute(A, B), A, B)
+    assert eng.stats.arena_spills == 1   # leased fused path again
+
+
+# ---------------------------------------------------------------------------
+# Arena-aware cache eviction: no leak, in-flight leases forfeited.
+# ---------------------------------------------------------------------------
+
+def test_evict_forfeits_inflight_lease_without_leak():
+    A, B = _pair(67)
+    cfg = SpgemmConfig(method="esc")
+    ar = Arena()
+    eng = SpgemmEngine(cfg, arena=ar)
+    eng.execute(A, B)
+    eng.execute(A, B)
+    key = (MatrixSig.of(A), MatrixSig.of(B), cfg)
+
+    # Dispatch without finalizing: the lease is checked out (in flight).
+    rec = eng._dispatch(next(eng._uids), A, B, cfg)
+    assert ar.bytes_in_use > 0
+    free_before = ar.bytes_free
+    assert eng.cache.evict(key)
+    # Forfeited: dropped from accounting but NOT recycled — the buffers
+    # were donated into the still-running executable.
+    assert ar.bytes_in_use == 0
+    assert ar.bytes_free == free_before
+    # The straggler finalize still verifies, and its release is a no-op.
+    _check(eng._finalize(rec), A, B)
+    assert ar.bytes_in_use == 0
+    assert ar.bytes_free == free_before
+
+    # Clearing a cache with parked (released) leases leaks nothing.
+    eng.execute(A, B)
+    eng.execute(A, B)
+    eng.cache.clear()
+    assert ar.bytes_in_use == 0
+
+
+def test_evict_prefers_smaller_stamp_then_bigger_footprint():
+    cfg = SpgemmConfig(method="esc")
+    cache_engine = SpgemmEngine(cfg, arena=Arena(), cache_capacity=2)
+    small = _pair(71, m=16, k=12, n=14)
+    big = _pair(73, m=48, k=44, n=40, da=6.0, db=6.0)
+    cache_engine.execute(*small)
+    cache_engine.execute(*small)
+    cache_engine.execute(*big)           # cache full: {small, big}
+    key_small = (MatrixSig.of(small[0]), MatrixSig.of(small[1]), cfg)
+    key_big = (MatrixSig.of(big[0]), MatrixSig.of(big[1]), cfg)
+    cache_engine.execute(*small)         # small is now most recently used
+    other = _pair(75, m=20, k=18, n=22)
+    cache_engine.execute(*other)         # evicts big (older stamp)
+    assert cache_engine.cache.get(key_small) is not None
+    assert cache_engine.cache.get(key_big) is None
+
+
+# ---------------------------------------------------------------------------
+# Dump/load: loaded plans rebind to the live arena; v2 compat mapping.
+# ---------------------------------------------------------------------------
+
+def test_load_rebinds_plans_to_live_arena(tmp_path):
+    A, B = _pair(77)
+    cfg = SpgemmConfig(method="esc")
+    a1 = Arena()
+    warm = SpgemmEngine(cfg, arena=a1)
+    warm.execute(A, B)
+    warm.execute(A, B)
+    reserved1 = a1.bytes_reserved
+    path = str(tmp_path / "plans.json")
+    assert warm.cache.dump(path) >= 1
+
+    a2 = Arena()
+    fresh = SpgemmEngine(cfg, arena=a2)
+    assert fresh.cache.load(path) >= 1
+    _check(fresh.execute(A, B), A, B)    # loaded plan: straight to hot path
+    # The lease came from the NEW engine's arena, not the dump's origin.
+    assert a2.lease_misses == 2 and a2.bytes_reserved > 0
+    assert a1.bytes_reserved == reserved1
+    fresh.cache.clear()
+    assert a2.bytes_in_use == 0
+
+
+def test_load_v2_dump_merges_fallback_buckets(tmp_path):
+    A, B = _pair(79)
+    cfg = SpgemmConfig(method="hash")
+    warm = SpgemmEngine(cfg, arena=Arena())
+    warm.execute(A, B)
+    warm.execute(A, B)
+    path = str(tmp_path / "plans.json")
+    warm.cache.dump(path)
+
+    blob = json.load(open(path))
+    assert blob["version"] == 3
+    blob["version"] = 2                  # pre-merge payload: split buckets
+    for plan in blob["plans"]:
+        hs = plan["hash_schedule"]
+        del hs["fall_prod_bucket"]
+        hs["sym_fall_prod_bucket"] = 1024
+        hs["num_fall_prod_bucket"] = 4096
+    json.dump(blob, open(path, "w"))
+
+    fresh = SpgemmEngine(cfg, arena=Arena())
+    assert fresh.cache.load(path) >= 1
+    entry = fresh.cache.get((MatrixSig.of(A), MatrixSig.of(B), cfg))
+    # v2's separate sym/num fallback buckets merge to their max.
+    assert entry.plan.hash_schedule.fall_prod_bucket == 4096

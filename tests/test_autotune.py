@@ -124,16 +124,17 @@ def test_trim_buckets_shrink_drop_and_pack_floor():
     out = trim_buckets(maxima, current, m=64, headroom=1.5,
                        packs=(1, 32, 1, 1))
     assert out == (64, 32, 0, 0, 0)
-    # Fallback capacity trims with its rows bucket, 0 when the rung drops.
-    assert trim_fallback(100, 4096, 1.5, rows_bucket=0) == 0
-    assert trim_fallback(100, 4096, 1.5, rows_bucket=8) == 256
-    assert trim_fallback(0, 4096, 1.5, rows_bucket=8) == 4096  # conservative
+    # Fallback capacity trims while any fallback rung stays active, 0
+    # when every rung dropped (the shared sym/num bucket).
+    assert trim_fallback(100, 4096, 1.5, active=False) == 0
+    assert trim_fallback(100, 4096, 1.5, active=True) == 256
+    assert trim_fallback(0, 4096, 1.5, active=True) == 4096  # conservative
 
 
 def test_trim_schedule_noop_returns_none():
     sched = HashSchedule(sym_row_buckets=(16, 0, 0, 0, 0, 0, 0, 0, 0),
                          num_row_buckets=(16, 0, 0, 0, 0, 0, 0, 0),
-                         sym_fall_prod_bucket=0, num_fall_prod_bucket=0)
+                         fall_prod_bucket=0)
     state = PolicyState(streak=8,
                         sym_max=(9, 0, 0, 0, 0, 0, 0, 0, 0),
                         num_max=(9, 0, 0, 0, 0, 0, 0, 0))
