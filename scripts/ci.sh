@@ -37,6 +37,16 @@ echo "== arena gate (K shape buckets under a governor cap: peak bytes, parity) =
 python benchmarks/bench_engine.py --smoke --arena
 
 echo
+echo "== estimate gate (sampled cold planning: >=3x sizing, bitwise parity) =="
+# plan_mode="estimate" stream first (cold — its sizing is a host-side
+# sampled estimate, no kernel compiles), exact-planning baseline second
+# on a fresh engine in the same process (ordering biases AGAINST the
+# gate).  Gates: the estimator beats the exact symbolic sizing pass
+# >=3x, the full first call is no slower, zero post-warmup retraces,
+# steady state no worse, and bitwise result parity on every request.
+python benchmarks/bench_engine.py --smoke --estimate --method hash
+
+echo
 echo "== telemetry gate (traced smoke: schema-valid spans, <5% overhead) =="
 # The trace is schema-validated in-process (validate_chrome_trace) and
 # must contain the full nested span pipeline including the sharded

@@ -59,6 +59,13 @@ class SpgemmConfig:
     timing: bool = False             # per-step wall-clock (benchmarks)
     shards: int = 1                  # row-block shards of A (engine fan-out;
                                      # AUTO_SHARDS = telemetry-chosen)
+    # Cold-path planning mode.  "exact" = the paper's full symbolic pass
+    # sizes every bucket before the first execution; "estimate" = the
+    # Ocean-style sampled nnz estimator predicts the buckets and the cold
+    # call jumps straight to a specialized executable, with the
+    # overflow-grow retrace as the correctness safety net.  (Warm starts
+    # via PlanCache.load are orthogonal and work with either.)
+    plan_mode: str = "exact"         # "exact" | "estimate"
 
     def ladders(self) -> tuple[BinLadder, BinLadder]:
         return (symbolic_ladder(self.sym_multiplier, vmem_extended=self.vmem_extended),

@@ -6,8 +6,10 @@ API and the serving/analytics front-ends:
   plan.py      — immutable :class:`SpgemmPlan` over operand signatures
                  (everything derivable before data arrives).
   autotune.py  — :class:`AdaptivePolicy` / :class:`PolicyState`:
-                 telemetry-driven shard-count selection (AUTO_SHARDS)
-                 and tracked-jitter hash-schedule headroom.
+                 telemetry-driven shard-count selection (AUTO_SHARDS),
+                 tracked-jitter hash-schedule headroom, and the
+                 :class:`EstimatorState` calibration loop behind
+                 ``plan_mode="estimate"`` cold planning.
   partition.py — :class:`ShardSpec` row-block partitioning (flop-balanced
                  bounds, pow-2 shard buckets) + mesh placement helpers.
   cache.py     — LRU :class:`PlanCache` of plans + jitted executables
@@ -37,8 +39,9 @@ from repro.core.workspace import (Arena, ArenaPressureError, Lease,
                                   LeaseSpec, default_arena,
                                   reset_default_arena)
 
-from .autotune import (AdaptivePolicy, MemoryGovernor, PolicyState,
-                       choose_shards, revise_shards, trim_schedule)
+from .autotune import (AdaptivePolicy, EstimatorState, MemoryGovernor,
+                       PolicyState, choose_shards, revise_shards,
+                       trim_schedule)
 from .cache import CacheEntry, PlanCache
 from .executor import (SpgemmEngine, SpgemmRequest, StepTimer,
                        default_engine, reset_default_engine)
@@ -54,8 +57,8 @@ from .telemetry import (LATENCY_BUCKETS_S, EventLog, MetricsRegistry, Span,
                         validate_chrome_trace)
 
 __all__ = [
-    "AUTO_SHARDS", "AdaptivePolicy", "PolicyState", "choose_shards",
-    "revise_shards", "trim_schedule",
+    "AUTO_SHARDS", "AdaptivePolicy", "EstimatorState", "PolicyState",
+    "choose_shards", "revise_shards", "trim_schedule",
     "Arena", "ArenaPressureError", "Lease", "LeaseSpec", "MemoryGovernor",
     "default_arena", "reset_default_arena",
     "CacheEntry", "PlanCache", "SpgemmEngine", "SpgemmRequest", "StepTimer",

@@ -88,6 +88,20 @@ class AdaptivePolicy:
     max_shards: Optional[int] = None
     revise_period: int = 8
     revise_factor: float = 4.0
+    # plan_mode="estimate" knobs: the sampled-ratio tail quantile, the
+    # sample size (pow-2 keeps the gather/sample-symbolic compiles
+    # shared), and the bounds/steps of the ENGINE-level learned headroom
+    # multiplier on the estimator's tail ratio (EstimatorState) — grown
+    # on an estimate miss (overflow retrace of an estimated plan), shrunk
+    # toward ``min`` after a sustained miss-free streak.
+    est_quantile: float = 0.9
+    est_sample_rows: int = 64
+    est_headroom_init: float = 1.5
+    est_headroom_min: float = 1.1
+    est_headroom_max: float = 4.0
+    est_headroom_grow: float = 2.0
+    est_headroom_shrink: float = 0.9
+    est_hit_streak: int = 16
 
 
 @dataclasses.dataclass(frozen=True)
@@ -112,6 +126,12 @@ class PolicyState:
     flops_calls: int = 0
     shard_decision: Optional[int] = None
     shard_basis: int = 0         # mean flops the decision was made from
+    # Provenance: True while the plan's buckets come from the sampling
+    # estimator and no admitted finalize has confirmed them yet (cleared
+    # on the first admit; a retrace re-derives exact buckets and also
+    # clears it).  Serialized in cache dumps (format v4) so a warm-started
+    # replica knows which loaded schedules are still unverified.
+    estimated: bool = False
 
     # -- hash-schedule jitter tracking --------------------------------------
     def note_admit(self, sym_sizes: Sequence[int], sym_fall: int,
@@ -175,6 +195,10 @@ class PolicyState:
             self, shard_decision=int(n), shard_basis=int(basis),
             flops_total=0, flops_calls=0)
 
+    # -- estimate provenance -------------------------------------------------
+    def with_estimated(self, flag: bool) -> "PolicyState":
+        return dataclasses.replace(self, estimated=bool(flag))
+
     # -- persistence merge ---------------------------------------------------
     def union(self, other: "PolicyState") -> "PolicyState":
         """Monotone merge for cross-process cache loads: keep the larger
@@ -200,7 +224,48 @@ class PolicyState:
                             if self.shard_decision is not None
                             else other.shard_decision),
             shard_basis=max(self.shard_basis, other.shard_basis),
+            # Unverified taints the merge: a verified replica merging an
+            # estimated peer must not launder the peer's buckets.
+            estimated=self.estimated or other.estimated,
         )
+
+
+# ---------------------------------------------------------------------------
+# Estimator headroom tracking (plan_mode="estimate").
+# ---------------------------------------------------------------------------
+
+class EstimatorState:
+    """Engine-level learned headroom for the sampling estimator.
+
+    Mutable (like :class:`~repro.engine.stats.EngineStats`, unlike the
+    per-plan immutable ``PolicyState``): the ratio tail is a property of
+    the *stream*, not of one plan, so every estimated specialization
+    shares one multiplier.  The same grow/shrink discipline as the hash
+    headroom — an estimate miss (overflow retrace of estimated buckets)
+    doubles it, a sustained miss-free streak of verified estimates steps
+    it back toward the floor.
+    """
+
+    def __init__(self, policy: AdaptivePolicy):
+        self._policy = policy
+        self.headroom: float = policy.est_headroom_init
+        self.hits = 0            # estimated plans confirmed by an admit
+        self.misses = 0          # estimated plans corrected by a retrace
+        self._streak = 0
+
+    def note_hit(self) -> None:
+        self.hits += 1
+        self._streak += 1
+        if self._streak >= self._policy.est_hit_streak:
+            self._streak = 0
+            self.headroom = max(self._policy.est_headroom_min,
+                                self.headroom * self._policy.est_headroom_shrink)
+
+    def note_miss(self) -> None:
+        self.misses += 1
+        self._streak = 0
+        self.headroom = min(self._policy.est_headroom_max,
+                            self.headroom * self._policy.est_headroom_grow)
 
 
 # ---------------------------------------------------------------------------
@@ -320,7 +385,10 @@ def trim_schedule(state: PolicyState, current, *, m: int,
     if state.sym_max is None:
         return None
     headroom = state.trim_headroom(policy)
-    packs = sym_ladder.rows_per_block if (fused and packed) else None
+    # Packing now applies to the standalone symbolic kernels too, so a
+    # packed plan's sym buckets stay rows_per_block-aligned whether or
+    # not the numeric side is fused into the same table build.
+    packs = sym_ladder.rows_per_block if packed else None
     sym = trim_buckets(state.sym_max, current.sym_row_buckets, m, headroom,
                        packs)
     num = current.num_row_buckets

@@ -34,11 +34,15 @@ from .stats import PlanStats, plan_label
 # pack-aligned).  v2 adds the policy blob.  v3 merges the per-phase
 # fallback capacities into one shared ``fall_prod_bucket`` — loading a
 # v1/v2 schedule takes the max of its two buckets (monotone: every
-# previously-admitted request stays admitted).  ``load`` accepts all
-# three and re-derives pack alignment for fused+packed plans either way —
-# see ``_align_schedule_for_packing``.
-_DUMP_VERSION = 3
-_LOADABLE_VERSIONS = (1, 2, 3)
+# previously-admitted request stays admitted).  v4 adds estimation-based
+# planning provenance: configs carry ``plan_mode`` and policies the
+# ``estimated`` flag (both serialized through ``dataclasses.asdict``, so
+# the schema change is free) — older blobs load via the dataclass
+# defaults ("exact" / False: pre-estimator plans were all exact-sized).
+# ``load`` accepts all four and re-derives pack alignment for packed
+# plans either way — see ``_align_schedule_for_packing``.
+_DUMP_VERSION = 4
+_LOADABLE_VERSIONS = (1, 2, 3, 4)
 
 
 @dataclasses.dataclass
@@ -341,8 +345,10 @@ def _align_schedule_for_packing(plan: SpgemmPlan) -> SpgemmPlan:
     A schedule persisted before row packing / fusion landed (v1 dumps) —
     or hand-edited JSON — can hold sym buckets that are not pow-2, or
     smaller than a rung's ``rows_per_block``; ``admits_fused`` would
-    still pass (the observed sizes fit) while the fused packed kernels
-    require pow-2 buckets carved into whole ``pack``-row grid steps.
+    still pass (the observed sizes fit) while the packed kernels (fused
+    or standalone symbolic — both pack since the symbolic kernel gained
+    sub-table batching) require pow-2 buckets carved into whole
+    ``pack``-row grid steps.
     Alignment is monotone (buckets only grow), so every previously-
     admitted request stays admitted.
     """
@@ -350,7 +356,7 @@ def _align_schedule_for_packing(plan: SpgemmPlan) -> SpgemmPlan:
     if sched is None or plan.config.method != "hash":
         return plan
     packs = plan.sym_ladder.rows_per_block
-    fused_packed = plan.config.fuse_numeric and plan.config.row_packing
+    packed = plan.config.row_packing
 
     def aligned(buckets, rung_packs):
         out = []
@@ -365,7 +371,7 @@ def _align_schedule_for_packing(plan: SpgemmPlan) -> SpgemmPlan:
 
     aligned_sched = HashSchedule(
         sym_row_buckets=aligned(sched.sym_row_buckets,
-                                packs if fused_packed else None),
+                                packs if packed else None),
         num_row_buckets=aligned(sched.num_row_buckets, None),
         fall_prod_bucket=sched.fall_prod_bucket)
     if aligned_sched == sched:

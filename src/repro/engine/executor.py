@@ -47,8 +47,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import esc
-from repro.core.analysis import (exclusive_sum_in_place, nprod_into_rpt,
-                                 row_flops)
+from repro.core.analysis import (estimate_result, exclusive_sum_in_place,
+                                 nprod_into_rpt, row_flops)
 from repro.core.binning import bin_rows, bin_rows_for_ladder
 from repro.core.csr import CSR
 from repro.core.spgemm import (AUTO_SHARDS, SpgemmConfig, SpgemmResult,
@@ -165,11 +165,13 @@ def _execute_steps(A: CSR, B: CSR, plan: SpgemmPlan,
     # ---- step3: symbolic ----------------------------------------------------
     sym_buckets = sym_fall = None
     if config.method == "hash":
-        # Packed fused configs need pack-aligned sym buckets (the fused
-        # kernels batch rows_per_block rows per grid step); learning them
-        # aligned here keeps every later union/floor aligned too.
+        # Packed configs need pack-aligned sym buckets (the packed kernels
+        # batch rows_per_block rows per grid step); learning them aligned
+        # here keeps every later union/floor aligned too.  The standalone
+        # symbolic kernel packs just like the fused one, so the alignment
+        # is needed whether or not the numeric phase fuses.
         sym_packs = (sym_ladder.rows_per_block
-                     if config.fuse_numeric and config.row_packing else None)
+                     if config.row_packing else None)
         sym_buckets, sym_fall = _floor_schedule(
             *spgemm_hash.host_schedule(A, B, sym_binning, sym_ladder,
                                        headroom=headroom,
@@ -180,7 +182,7 @@ def _execute_steps(A: CSR, B: CSR, plan: SpgemmPlan,
             A, B, sym_binning, sym_ladder,
             row_buckets=sym_buckets, fallback_prod_capacity=sym_fall,
             single_access=config.hash_single_access,
-            interpret=config.interpret)
+            interpret=config.interpret, row_packing=config.row_packing)
     else:
         nnz_buf = esc.symbolic(A, B, prod_capacity=prod_capacity)
     timer.measure("symbolic", nnz_buf)
@@ -478,6 +480,10 @@ class _Pending:
     auto_entry: Optional[CacheEntry] = None  # AUTO_SHARDS policy entry
     span: Optional[Span] = None   # open request/shard span (ends at finalize)
     lease: Optional[Lease] = None  # arena workspace checked out at dispatch
+    # Host-side phase wall-clocks captured at dispatch (estimate-mode cold
+    # calls: estimate/build/compile_dispatch) — merged into the finalized
+    # SpgemmResult.timings so benchmarks see the cold-phase breakdown.
+    timings: Dict[str, float] = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -575,6 +581,11 @@ class SpgemmEngine:
         self.cache = PlanCache(cache_capacity, telemetry=self.telemetry,
                                arena=self.arena)
         self.stats = EngineStats(registry=self.telemetry.registry)
+        # Engine-level estimator calibration (plan_mode="estimate"): the
+        # tail-quantile headroom is learned ACROSS plans from observed
+        # confirm/retrace telemetry — misses are a property of the traffic
+        # distribution, not of one signature.
+        self.est_state = autotune.EstimatorState(self.policy)
         reg = self.telemetry.registry
         self._hist_request = reg.histogram("opsparse_request_latency_seconds")
         self._hist_cold = reg.histogram("opsparse_cold_steps_seconds")
@@ -630,7 +641,8 @@ class SpgemmEngine:
 
     def prewarm(self, A: CSR, B: CSR,
                 config: Optional[SpgemmConfig] = None, *,
-                prod_bucket: int, nnz_bucket: int) -> SpgemmPlan:
+                prod_bucket: Optional[int] = None,
+                nnz_bucket: Optional[int] = None) -> SpgemmPlan:
         """Ahead-of-time plan specialization (no execution).
 
         Seeds the plan for (A, B)'s signatures with caller-provided
@@ -639,6 +651,12 @@ class SpgemmEngine:
         front, e.g. a BFS whose frontiers grow hop over hop.  The first
         real request then goes straight to the jitted hot path instead
         of paying a cold discovery call plus progressive regrows.
+
+        With NO buckets supplied the sampling estimator sizes the plan
+        instead (``core/analysis.estimate_result``): capacities, and for
+        hash configs the full launch schedule — so an estimator prewarm
+        fully specializes even hash plans, which explicit buckets alone
+        cannot (they lack the schedule).
 
         Capacity buckets are per-(sub-)problem state, which a sharded
         parent plan doesn't hold — its partition needs data the caller
@@ -655,12 +673,101 @@ class SpgemmEngine:
         entry = self.cache.get((a_sig, b_sig, config))
         if entry is None:
             entry = self.cache.insert(make_plan(a_sig, b_sig, config))
+        if prod_bucket is None and nnz_bucket is None:
+            if not entry.plan.is_specialized:
+                uid = next(self._uids)
+                with self.telemetry.span("estimate", uid=uid,
+                                         prewarm=True):
+                    self._estimate_specialize(
+                        entry, A.with_capacity(a_sig.cap_bucket),
+                        B.with_capacity(b_sig.cap_bucket), uid)
+            return entry.plan
+        if prod_bucket is None or nnz_bucket is None:
+            raise ValueError(
+                "pass both prod_bucket and nnz_bucket, or neither "
+                "(estimator-sized prewarm)")
         self.cache.specialize(entry, entry.plan.with_capacities(
             max(entry.plan.prod_bucket or 0,
                 next_bucket(max(prod_bucket, 1))),
             max(entry.plan.nnz_bucket or 0,
                 next_bucket(max(nnz_bucket, 1)))))
         return entry.plan
+
+    def _estimate_specialize(self, entry: CacheEntry, A: CSR, B: CSR,
+                             uid: int) -> Dict[str, float]:
+        """Specialize a cold plan from the sampled estimator
+        (``plan_mode="estimate"`` — the Ocean-style cold path).
+
+        The exact cold path runs the FULL symbolic phase (and, two-pass,
+        a second probe pass) just to size buckets.  Here the per-row
+        n_prod fetch — the same host sync the flop partitioner pays —
+        yields the EXACT symbolic-side schedule, and a small measured row
+        sample bands the compression ratio to predict the nnz bucket and
+        the numeric-side rung counts.  The plan is specialized in one
+        step (capacities + hash launch schedule) with its policy marked
+        ``estimated=True``; the finalize verify confirms it on the first
+        admitted call, and an under-estimate pays one overflow-grow
+        retrace (bitwise-equal result via the steps oracle) while the
+        engine-level :class:`~repro.engine.autotune.EstimatorState`
+        grows the tail headroom for the next cold plan.
+
+        Returns the host wall-clock as a timings fragment
+        (``{"estimate": seconds}``) for the cold-phase breakdown.
+        """
+        plan = entry.plan
+        config = plan.config
+        t0 = time.perf_counter()
+        est = estimate_result(
+            A, B,
+            sym_upper=plan.sym_ladder.upper,
+            num_upper=plan.num_ladder.upper,
+            n_sample=self.policy.est_sample_rows,
+            quantile=self.policy.est_quantile,
+            headroom=self.est_state.headroom)
+        self.stats.estimates += 1
+        self.telemetry.event(
+            "estimate", uid=uid, sampled_rows=est.sampled_rows,
+            r_lo=est.r_lo, r_hi=est.r_hi, total_nprod=est.total_nprod,
+            total_nnz_high=est.total_nnz_high,
+            est_headroom=self.est_state.headroom)
+        prod_cap = max(plan.prod_bucket or 0,
+                       next_bucket(max(int(est.total_nprod
+                                           * _CAPACITY_HEADROOM), 1)))
+        nnz_cap = max(plan.nnz_bucket or 0,
+                      next_bucket(max(int(est.total_nnz_high
+                                          * _CAPACITY_HEADROOM), 1)))
+        state = plan.policy or PolicyState(
+            headroom=self.policy.headroom_init)
+        specialized = plan.with_capacities(prod_cap, nnz_cap)
+        if config.method == "hash":
+            # Same bucket math as host_schedule/trim_schedule (the ONE
+            # shared copy in spgemm_hash), fed estimated counts: exact
+            # rows per sym rung, band-high rows per num rung, and the
+            # band-high fallback products shared by both phases.
+            m_cap = next_bucket(plan.a_sig.nrows,
+                                minimum=spgemm_hash._ROW_BUCKET_MIN)
+            packs = (plan.sym_ladder.rows_per_block
+                     if config.row_packing else None)
+            sym_buckets = tuple(
+                spgemm_hash.schedule_bucket(
+                    c, m_cap=m_cap, headroom=state.headroom,
+                    pack=(packs[b] if packs is not None and b < len(packs)
+                          else 1))
+                for b, c in enumerate(est.sym_counts))
+            num_buckets = tuple(
+                spgemm_hash.schedule_bucket(c, m_cap=m_cap,
+                                            headroom=state.headroom)
+                for c in est.num_counts)
+            fall = max(est.sym_fall_prod, est.num_fall_prod)
+            fall_bucket = (spgemm_hash.fallback_capacity_bucket(
+                fall, headroom=state.headroom) if fall else 0)
+            sched = HashSchedule(sym_buckets, num_buckets, fall_bucket)
+            if plan.hash_schedule is not None:
+                sched = sched.union(plan.hash_schedule)
+            specialized = specialized.with_hash_schedule(sched)
+        self.cache.specialize(
+            entry, specialized.with_policy(state.with_estimated(True)))
+        return {"estimate": time.perf_counter() - t0}
 
     def submit(self, A: CSR, B: CSR,
                config: Optional[SpgemmConfig] = None) -> int:
@@ -909,6 +1016,16 @@ class SpgemmEngine:
         B = B.with_capacity(b_sig.cap_bucket)
 
         plan = entry.plan
+        est_timings: Optional[Dict[str, float]] = None
+        if (config.plan_mode == "estimate" and not plan.is_specialized
+                and config.method in ("esc", "hash") and not config.timing):
+            # Estimation-based cold path: specialize straight from the
+            # sampled estimator and fall through to the jitted hot path —
+            # the full symbolic sizing pass never runs.  The finalize
+            # verify (+ overflow-grow retrace) is the correctness net.
+            with tel.span("estimate", parent=span, uid=uid):
+                est_timings = self._estimate_specialize(entry, A, B, uid)
+            plan = entry.plan
         hot_eligible = (plan.is_specialized
                         and config.method in ("esc", "hash")
                         and not config.timing)
@@ -918,11 +1035,15 @@ class SpgemmEngine:
             # StepTimer carries the tracer, so the six paper steps (setup,
             # binnings, symbolic, alloc, numeric) emit kernel-phase spans
             # nested under cold_steps — attribution on exactly the path
-            # that already host-syncs per step.
+            # that already host-syncs per step.  Truly-cold calls keep the
+            # timer on even untraced so benchmarks get the cold-phase
+            # breakdown (the steps path host-syncs per step anyway).
             with tel.span("cold_steps", parent=span, uid=uid,
                           specialized=plan.is_specialized) as cold:
                 result, prod_cap, nnz_cap, hash_sched = _execute_steps(
-                    A, B, plan, StepTimer(config.timing, tracer=tel, uid=uid),
+                    A, B, plan,
+                    StepTimer(config.timing or not plan.is_specialized,
+                              tracer=tel, uid=uid),
                     headroom=state.headroom)
             if tel.enabled:
                 self._hist_cold.observe(cold.dur)
@@ -965,6 +1086,7 @@ class SpgemmEngine:
             entry.leases.append(lease)   # eviction forfeits outstanding ones
         if entry.executable is None:
             with tel.span("build_executable", parent=span, uid=uid):
+                t_build = time.perf_counter()
                 if config.method != "hash":
                     builder = _build_hot_executable
                 elif config.fuse_numeric:
@@ -972,14 +1094,21 @@ class SpgemmEngine:
                 else:
                     builder = _build_hash_executable
                 entry.executable = builder(plan)
+                if est_timings is not None:
+                    est_timings["build"] = time.perf_counter() - t_build
         with tel.span("dispatch", parent=span, uid=uid):
+            t_disp = time.perf_counter()
             if lease is None:
                 handles = entry.executable(A, B)   # async dispatch, no sync
             else:
                 handles = entry.executable(A, B, lease.i32, lease.val)
+            if est_timings is not None:
+                # First call through a fresh executable: the jit dispatch
+                # blocks on trace+compile, so this IS the compile cost.
+                est_timings["compile_dispatch"] = time.perf_counter() - t_disp
         entry.stats.hot_calls += 1
         return _Pending(uid, entry, plan, A, B, handles, t0, span=span,
-                        lease=lease)
+                        lease=lease, timings=est_timings or {})
 
     def _dispatch_sharded(self, uid: int, A: CSR, B: CSR,
                           config: SpgemmConfig) -> _Record:
@@ -1191,11 +1320,20 @@ class SpgemmEngine:
             if (total_nprod > plan.prod_bucket
                     or total_nnz > plan.nnz_bucket):
                 return self._grow_and_redo(rec, total_nprod, total_nnz)
+            # ESC plans carry no hash schedule, so the estimate
+            # confirmation doesn't ride _note_hash_admit — clear the
+            # provenance flag here.
+            state = rec.entry.plan.policy
+            if state is not None and state.estimated:
+                self._note_estimate_confirmed(rec.uid)
+                self.cache.update_policy(rec.entry,
+                                         state.with_estimated(False))
 
         rec.entry.stats.time_s += time.perf_counter() - rec.t0
         return SpgemmResult(
             C=C, total_nprod=total_nprod, total_nnz=total_nnz,
-            sym_binning=sym_binning, num_binning=num_binning, timings={})
+            sym_binning=sym_binning, num_binning=num_binning,
+            timings=dict(rec.timings))
 
     def _finalize_sharded(self, rec: _ShardedPending) -> SpgemmResult:
         """Merge finalizer: one verify sync per shard (each sub-record's
@@ -1271,6 +1409,16 @@ class SpgemmEngine:
             total_nnz=sum(r.total_nnz for r in shard_results),
             sym_binning=None, num_binning=None, timings=timings)
 
+    def _note_estimate_confirmed(self, uid: int) -> None:
+        """One ADMITTED finalize just verified an estimated plan: count
+        the hit and let the engine-level estimator headroom decay toward
+        its floor (sustained accuracy should not keep paying day-one
+        conservatism)."""
+        self.stats.estimate_hits += 1
+        self.est_state.note_hit()
+        self.telemetry.event("estimate_confirmed", uid=uid,
+                             est_headroom=self.est_state.headroom)
+
     def _note_hash_admit(self, rec: _Pending, sym_sizes, sym_fall,
                          num_sizes=None, num_fall=0) -> None:
         """Adaptive-headroom telemetry for one ADMITTED hash finalize.
@@ -1289,6 +1437,11 @@ class SpgemmEngine:
         if plan.hash_schedule is None:
             return
         state = plan.policy or PolicyState(headroom=self.policy.headroom_init)
+        if state.estimated:
+            # First admitted finalize under an estimated schedule:
+            # the prediction held — promote the plan to verified.
+            self._note_estimate_confirmed(rec.uid)
+            state = state.with_estimated(False)
         state = state.note_admit(sym_sizes, sym_fall, num_sizes, num_fall)
         if state.wants_trim(self.policy):
             trimmed = autotune.trim_schedule(
@@ -1340,6 +1493,16 @@ class SpgemmEngine:
         # headroom (and a fresh streak/trim epoch).
         state = current.policy or PolicyState(
             headroom=self.policy.headroom_init)
+        if state.estimated:
+            # An estimated plan under-provisioned: the steps redo below
+            # re-derives EXACT buckets (clearing the provenance flag),
+            # and the engine-level estimator headroom grows so the next
+            # cold estimate is more conservative.
+            self.stats.estimate_misses += 1
+            self.est_state.note_miss()
+            tel.event("estimate_miss", uid=rec.uid,
+                      schedule_overflow=schedule_overflow)
+            state = state.with_estimated(False)
         if schedule_overflow:
             state = state.note_overflow(self.policy)
         grown = grown.with_policy(state)

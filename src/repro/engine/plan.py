@@ -236,6 +236,10 @@ def plan(a_sig: MatrixSig, b_sig: MatrixSig,
     (M, NUM_BIN) alone.  Capacity buckets stay unlearned (``None``).
     """
     assert a_sig.ncols == b_sig.nrows, (a_sig, b_sig)
+    if config.plan_mode not in ("exact", "estimate"):
+        raise ValueError(
+            f"unknown plan_mode {config.plan_mode!r} "
+            "(expected 'exact' or 'estimate')")
     sym_ladder, num_ladder = config.ladders()
     return SpgemmPlan(
         a_sig=a_sig, b_sig=b_sig, config=config,

@@ -154,13 +154,17 @@ class EngineStats(_RegistryStats):
     arena_pressure    governor-cap lease refusals (degradation entered)
     arena_trims       forced headroom trims under arena pressure
     arena_spills      fused calls spilled to the unleased two-pass path
+    estimates         cold plans specialized from the sampling estimator
+    estimate_hits     estimated plans confirmed by an admitted finalize
+    estimate_misses   estimated plans corrected by an overflow retrace
     """
 
     _PREFIX = "opsparse_engine_"
     _COUNTERS = ("requests", "overlapped", "capacity_grows", "bin_overflows",
                  "drains", "sharded_requests", "shard_grows", "reordered",
                  "auto_requests", "policy_revisions", "schedule_trims",
-                 "arena_pressure", "arena_trims", "arena_spills")
+                 "arena_pressure", "arena_trims", "arena_spills",
+                 "estimates", "estimate_hits", "estimate_misses")
     _GAUGES = ("peak_inflight",)
 
 
@@ -201,6 +205,13 @@ def render(engine) -> str:
         "%d schedule trims" % (
             s.auto_requests, s.policy_revisions, s.schedule_trims),
     ]
+    if s.estimates:
+        est = getattr(engine, "est_state", None)
+        lines.append(
+            "estimate: %d estimated plans, %d confirmed / %d retraced"
+            % (s.estimates, s.estimate_hits, s.estimate_misses)
+            + ("" if est is None
+               else ", headroom %.2f" % est.headroom))
     arena = getattr(engine, "arena", None)
     if arena is not None:
         lines.append(

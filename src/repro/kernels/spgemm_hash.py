@@ -46,10 +46,12 @@ The two-pass kernels stay as the parity/access-count oracle.
 
 Row packing (paper opt. 3 trade-off, TPU form): a rung whose table is
 smaller than the minimum (8, 128) int32 VMEM tile leaves most of the tile
-idle when one grid step owns one row.  With ``row_packing`` the fused
-kernel packs ``ladder.rows_per_block[b]`` rows per grid step as independent
-sub-tables inside one tile (per-sub-row offsets from scalar prefetch), so
-rung occupancy scales with the tile instead of the row.
+idle when one grid step owns one row.  With ``row_packing`` the fused AND
+standalone symbolic kernels pack ``ladder.rows_per_block[b]`` rows per grid
+step as independent sub-tables inside one tile (per-sub-row offsets from
+scalar prefetch), so rung occupancy scales with the tile instead of the
+row.  The two-pass NUMERIC kernels stay unpacked: they dump their raw
+tables, so packing would change the dumped stride for no occupancy win.
 """
 from __future__ import annotations
 
@@ -103,100 +105,114 @@ def _hash_next(h, t_size: int):
 # Symbolic kernel: count distinct column ids per row (no value multiply).
 # ---------------------------------------------------------------------------
 
-def _make_symbolic_kernel(t_size: int, single_access: bool):
-    t_rows, t_lanes = _table_geom(t_size)
+def _make_symbolic_kernel(t_size: int, pack: int, single_access: bool):
+    t_rows, stride = _packed_geom(t_size, pack)
     guard = _PROBE_GUARD_FACTOR * t_size
 
     def kernel(rows_smem, count_smem, a_rpt, a_col, b_rpt, b_col,
                nnz_out, acc_out, table):
         i = pl.program_id(0)
-        active = i < count_smem[0]
-        r = rows_smem[i]
-        # Fresh table per row (the paper re-initializes per thread block).
-        table[...] = jnp.full((t_rows, t_lanes), -1, jnp.int32)
-        a_lo = jnp.where(active, a_rpt[r], 0)
-        a_hi = jnp.where(active, a_rpt[r + 1], 0)
+        # One fresh tile per grid step (the paper re-initializes per thread
+        # block); sub-row j owns [j*stride, j*stride + t_size) of the
+        # flattened tile — identical to the fused kernel's packing.
+        table[...] = jnp.full((t_rows, 128), -1, jnp.int32)
 
-        def insert(key, carry):
-            nnz, acc = carry
-            h0 = _hash_init(key, t_size)
+        for j in range(pack):           # static unroll over the sub-tables
+            idx = i * pack + j
+            active = idx < count_smem[0]
+            r = rows_smem[idx]
+            base = j * stride
+            a_lo = jnp.where(active, a_rpt[r], 0)
+            a_hi = jnp.where(active, a_rpt[r + 1], 0)
 
-            def cond(st):
-                h, done, ins, probes = st
-                return (~done) & (probes < guard)
+            def insert(key, carry, base=base):
+                nnz, acc = carry
+                h0 = _hash_init(key, t_size)
 
-            if single_access:
-                def body(st):
+                def cond(st):
                     h, done, ins, probes = st
-                    hr, hl = h // 128, h % 128
-                    cur = table[hr, hl]                       # 1 transaction
-                    empty = cur == -1
-                    table[hr, hl] = jnp.where(empty, key, cur)
-                    hit = empty | (cur == key)
-                    return (_hash_next(h, t_size), hit, ins | empty,
-                            probes + 1)
-            else:
-                def body(st):
-                    h, done, ins, probes = st
-                    hr, hl = h // 128, h % 128
-                    cur = table[hr, hl]                       # transaction 1
-                    empty = cur == -1
-                    # nsparse-style: a separate CAS transaction claims the
-                    # empty slot (read-again-and-write).
-                    cur2 = jnp.where(empty, table[hr, hl], cur)  # transaction 2
-                    table[hr, hl] = jnp.where(empty, key, cur2)
-                    hit = empty | (cur == key)
-                    return (_hash_next(h, t_size), hit, ins | empty,
-                            probes + jnp.where(empty, 2, 1).astype(jnp.int32))
+                    return (~done) & (probes < guard)
 
-            h, done, ins, probes = jax.lax.while_loop(
-                cond, body, (h0, jnp.asarray(False), jnp.asarray(False),
-                             jnp.int32(0)))
-            return nnz + ins.astype(jnp.int32), acc + probes
+                if single_access:
+                    def body(st):
+                        h, done, ins, probes = st
+                        slot = base + h
+                        hr, hl = slot // 128, slot % 128
+                        cur = table[hr, hl]                   # 1 transaction
+                        empty = cur == -1
+                        table[hr, hl] = jnp.where(empty, key, cur)
+                        hit = empty | (cur == key)
+                        return (_hash_next(h, t_size), hit, ins | empty,
+                                probes + 1)
+                else:
+                    def body(st):
+                        h, done, ins, probes = st
+                        slot = base + h
+                        hr, hl = slot // 128, slot % 128
+                        cur = table[hr, hl]                   # transaction 1
+                        empty = cur == -1
+                        # nsparse-style: a separate CAS transaction claims
+                        # the empty slot (read-again-and-write).
+                        cur2 = jnp.where(empty, table[hr, hl], cur)  # 2
+                        table[hr, hl] = jnp.where(empty, key, cur2)
+                        hit = empty | (cur == key)
+                        return (_hash_next(h, t_size), hit, ins | empty,
+                                probes +
+                                jnp.where(empty, 2, 1).astype(jnp.int32))
 
-        def outer(e, carry):
-            k = a_col[a_lo + e]
-            b_lo = b_rpt[k]
-            b_hi = b_rpt[k + 1]
+                h, done, ins, probes = jax.lax.while_loop(
+                    cond, body, (h0, jnp.asarray(False), jnp.asarray(False),
+                                 jnp.int32(0)))
+                return nnz + ins.astype(jnp.int32), acc + probes
 
-            def inner(j, carry):
-                c = b_col[b_lo + j]
-                return insert(c, carry)
+            def outer(e, carry):
+                k = a_col[a_lo + e]
+                b_lo = b_rpt[k]
+                b_hi = b_rpt[k + 1]
 
-            return jax.lax.fori_loop(0, b_hi - b_lo, inner, carry)
+                def inner(jj, carry):
+                    c = b_col[b_lo + jj]
+                    return insert(c, carry)
 
-        nnz, acc = jax.lax.fori_loop(0, a_hi - a_lo, outer,
-                                     (jnp.int32(0), jnp.int32(0)))
-        nnz_out[0] = jnp.where(active, nnz, 0)
-        acc_out[0] = jnp.where(active, acc, 0)
+                return jax.lax.fori_loop(0, b_hi - b_lo, inner, carry)
+
+            nnz, acc = jax.lax.fori_loop(0, a_hi - a_lo, outer,
+                                         (jnp.int32(0), jnp.int32(0)))
+            nnz_out[j] = jnp.where(active, nnz, 0)
+            acc_out[j] = jnp.where(active, acc, 0)
 
     return kernel
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("t_size", "rows_cap", "single_access", "interpret"))
+    static_argnames=("t_size", "rows_cap", "pack", "single_access",
+                     "interpret"))
 def symbolic_bin_call(rows, count, a_rpt, a_col, b_rpt, b_col, *,
-                      t_size: int, rows_cap: int, single_access: bool,
+                      t_size: int, rows_cap: int, pack: int = 1,
+                      single_access: bool = True,
                       interpret: Optional[bool] = None):
     """Run the symbolic hash kernel over one bin.
 
     rows:  (rows_cap,) int32 row ids (padded); count: (1,) int32 valid rows.
+    One grid step counts ``pack`` rows as sub-tables of one VMEM tile
+    (``pack=1`` reproduces the one-row-per-step layout).
     Returns (nnz, accesses): both (rows_cap,) int32.
     """
     interpret = resolve_interpret(interpret)
-    t_rows, t_lanes = _table_geom(t_size)
+    assert rows_cap % pack == 0, (rows_cap, pack)
+    t_rows, _ = _packed_geom(t_size, pack)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
-        grid=(rows_cap,),
+        grid=(rows_cap // pack,),
         in_specs=[pl.BlockSpec(memory_space=pl.ANY)] * 4,
         out_specs=[
-            pl.BlockSpec((1,), lambda i, rows, cnt: (i,)),
-            pl.BlockSpec((1,), lambda i, rows, cnt: (i,)),
+            pl.BlockSpec((pack,), lambda i, rows, cnt: (i,)),
+            pl.BlockSpec((pack,), lambda i, rows, cnt: (i,)),
         ],
-        scratch_shapes=[pltpu.VMEM((t_rows, t_lanes), jnp.int32)],
+        scratch_shapes=[pltpu.VMEM((t_rows, 128), jnp.int32)],
     )
-    kernel = _make_symbolic_kernel(t_size, single_access)
+    kernel = _make_symbolic_kernel(t_size, pack, single_access)
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
@@ -552,6 +568,7 @@ def _check_schedule(row_buckets, ladder: BinLadder, fallback_prod_capacity):
 def symbolic_scheduled(A: CSR, B: CSR, binning: Binning, ladder: BinLadder,
                        *, row_buckets, fallback_prod_capacity: int = 0,
                        single_access: bool = True, interpret: Optional[bool] = None,
+                       row_packing: bool = False,
                        collect_accesses: bool = False):
     """Symbolic phase over a static bucketed schedule — fully traceable.
 
@@ -562,6 +579,11 @@ def symbolic_scheduled(A: CSR, B: CSR, binning: Binning, ladder: BinLadder,
     caller verifies against ``fallback_prod_capacity``; an overflowed
     fallback truncates its expansion, so results are only trustworthy
     when the check passes).
+
+    ``row_packing`` batches ``ladder.rows_per_block[b]`` rows per grid
+    step on rungs whose tables underfill a VMEM tile (``row_buckets``
+    must then be multiples of the pack — ``host_schedule(packs=...)``
+    guarantees it), exactly as in :func:`fused_scheduled`.
     """
     _check_schedule(row_buckets, ladder, fallback_prod_capacity)
     m = A.nrows
@@ -583,10 +605,12 @@ def symbolic_scheduled(A: CSR, B: CSR, binning: Binning, ladder: BinLadder,
         rows_cap = row_buckets[b]
         if not rows_cap:
             continue
+        pack = ladder.rows_per_block[b] if row_packing else 1
+        pack = min(pack, rows_cap)         # both pow-2: stays divisible
         rows, count = binning.rows_of_bin(b, rows_cap)
         nnz_bin, acc_bin = symbolic_bin_call(
             rows, count.reshape(1), A.rpt, A.col, B.rpt, B.col,
-            t_size=ladder.table_sizes[b], rows_cap=rows_cap,
+            t_size=ladder.table_sizes[b], rows_cap=rows_cap, pack=pack,
             single_access=single_access, interpret=interpret)
         valid = jnp.arange(rows_cap, dtype=jnp.int32) < count
         tgt = jnp.where(valid, rows, m + 1)
@@ -671,6 +695,7 @@ def host_schedule(A: CSR, B: CSR, binning: Binning, ladder: BinLadder, *,
 def symbolic_binned(A: CSR, B: CSR, binning: Binning, ladder: BinLadder, *,
                     prod_capacity: int = 0, single_access: bool = True,
                     interpret: Optional[bool] = None,
+                    row_packing: bool = False,
                     collect_accesses: bool = False):
     """Host-orchestrated symbolic phase (cold / standalone path).
 
@@ -681,11 +706,13 @@ def symbolic_binned(A: CSR, B: CSR, binning: Binning, ladder: BinLadder, *,
     hash rungs size their tables from the ladder, not the expansion).
     """
     del prod_capacity
-    row_buckets, fall_cap = host_schedule(A, B, binning, ladder)
+    packs = ladder.rows_per_block if row_packing else None
+    row_buckets, fall_cap = host_schedule(A, B, binning, ladder, packs=packs)
     nnz_buf, _, accesses = symbolic_scheduled(
         A, B, binning, ladder, row_buckets=row_buckets,
         fallback_prod_capacity=fall_cap, single_access=single_access,
-        interpret=interpret, collect_accesses=collect_accesses)
+        interpret=interpret, row_packing=row_packing,
+        collect_accesses=collect_accesses)
     if collect_accesses:
         return nnz_buf, accesses
     return nnz_buf

@@ -336,7 +336,7 @@ def test_load_v2_dump_merges_fallback_buckets(tmp_path):
     warm.cache.dump(path)
 
     blob = json.load(open(path))
-    assert blob["version"] == 3
+    assert blob["version"] == 4
     blob["version"] = 2                  # pre-merge payload: split buckets
     for plan in blob["plans"]:
         hs = plan["hash_schedule"]

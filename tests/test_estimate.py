@@ -1,0 +1,307 @@
+"""Estimation-based cold planning (``plan_mode="estimate"``).
+
+Covers the host-side sampling estimator (exact n_prod, column-union
+sample measurement, band-derived rung counts), its engine integration
+(cold calls specialize straight from the estimate; overflow-grow is the
+correctness net), int-width safety near 2^31, and dump v4 persistence
+of the new plan fields.
+"""
+import dataclasses
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (CSR, SpgemmConfig, bin_rows_for_ladder, esc,
+                        next_bucket, random_csr, spgemm_reference)
+from repro.core.analysis import (derive_estimate, estimate_result,
+                                 host_index, host_nprod, measure_sample_nnz,
+                                 nprod_into_rpt, sample_rows_for_estimate)
+from repro.engine import MatrixSig, SpgemmEngine, total_traces
+from repro.engine import executor as executor_mod
+
+
+def _pair(seed, m=48, k=40, n=44, da=3.0, db=3.0, dist="uniform"):
+    A = random_csr(jax.random.PRNGKey(seed), m, k, avg_nnz_per_row=da,
+                   distribution=dist)
+    B = random_csr(jax.random.PRNGKey(seed + 1), k, n, avg_nnz_per_row=db,
+                   distribution=dist)
+    return A, B
+
+
+def _true_nnz_per_row(A, B):
+    """Oracle: exact structural nnz per C row via the esc symbolic pass."""
+    nprod = np.asarray(jax.device_get(nprod_into_rpt(A, B)[:A.nrows]))
+    buf = esc.symbolic(A, B,
+                       prod_capacity=next_bucket(max(int(nprod.sum()), 1)))
+    return np.asarray(jax.device_get(buf[:A.nrows]), dtype=np.int64)
+
+
+# ---------------------------------------------------------------------------
+# Host-side measurement primitives.
+# ---------------------------------------------------------------------------
+
+def test_host_nprod_matches_device():
+    A, B = _pair(11)
+    a_rpt, a_col = host_index(A)
+    b_rpt, _ = host_index(B)
+    host = host_nprod(a_rpt, a_col, b_rpt)
+    dev = np.asarray(jax.device_get(nprod_into_rpt(A, B)[:A.nrows]))
+    np.testing.assert_array_equal(host, dev)
+
+
+def test_measure_sample_nnz_is_exact():
+    A, B = _pair(13, dist="powerlaw", da=4.0)
+    a_rpt, a_col = host_index(A)
+    b_rpt, b_col = host_index(B)
+    true_nnz = _true_nnz_per_row(A, B)
+    rows = np.arange(A.nrows, dtype=np.int64)      # "sample" = every row
+    measured = measure_sample_nnz(rows, a_rpt, a_col, b_rpt, b_col)
+    np.testing.assert_array_equal(measured, true_nnz)
+
+
+def test_sample_rows_deterministic_and_stratified():
+    nprod = np.array([0, 9, 1, 7, 0, 3, 100, 2, 5, 4], dtype=np.int64)
+    rows = sample_rows_for_estimate(nprod, n_sample=4)
+    assert rows.size == 4
+    assert 6 in rows                     # the heaviest row is always taken
+    assert np.all(nprod[rows] > 0)       # empty rows carry no ratio signal
+    np.testing.assert_array_equal(
+        rows, sample_rows_for_estimate(nprod, n_sample=4))
+    # Small populations come back whole.
+    np.testing.assert_array_equal(
+        sample_rows_for_estimate(nprod, n_sample=64), np.flatnonzero(nprod))
+
+
+# ---------------------------------------------------------------------------
+# Estimator accuracy across row-size distributions.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dist", ["uniform", "powerlaw", "banded"])
+def test_estimate_bounds_true_sizes(dist):
+    A, B = _pair(17, m=96, k=80, n=72, da=4.0, dist=dist)
+    cfg = SpgemmConfig()
+    sym_lad, num_lad = cfg.ladders()
+    est = estimate_result(A, B, sym_upper=sym_lad.upper,
+                          num_upper=num_lad.upper)
+    nprod = np.asarray(jax.device_get(nprod_into_rpt(A, B)[:A.nrows]),
+                       dtype=np.int64)
+    true_nnz = _true_nnz_per_row(A, B)
+
+    # Symbolic side is EXACT: n_prod is held exactly, so the rung counts
+    # must equal the device binning's.
+    assert est.total_nprod == int(nprod.sum())
+    sym_bn = bin_rows_for_ladder(jax.numpy.asarray(nprod.astype(np.int32)),
+                                 sym_lad)
+    dev_counts = np.asarray(jax.device_get(sym_bn.bin_size),
+                            dtype=np.int64)
+    np.testing.assert_array_equal(np.asarray(est.sym_counts), dev_counts)
+
+    # Numeric side is a band: the total must cover the truth without
+    # blowing past the trivial nprod bound, and each true rung count must
+    # be covered by the range-histogram's per-rung upper bound.
+    assert 0.0 <= est.r_lo <= est.r_hi <= 1.0
+    assert int(true_nnz.sum()) <= est.total_nnz_high <= est.total_nprod
+    num_bn = bin_rows_for_ladder(
+        jax.numpy.asarray(true_nnz.astype(np.int32)), num_lad)
+    true_counts = np.asarray(jax.device_get(num_bn.bin_size),
+                             dtype=np.int64)
+    assert np.all(true_counts <= np.asarray(est.num_counts))
+
+
+def test_estimate_all_empty_rows():
+    m, k, n = 16, 12, 10
+    A = CSR.from_dense(np.zeros((m, k), dtype=np.float32))
+    B = CSR.from_dense(np.zeros((k, n), dtype=np.float32))
+    cfg = SpgemmConfig()
+    sym_lad, num_lad = cfg.ladders()
+    est = estimate_result(A, B, sym_upper=sym_lad.upper,
+                          num_upper=num_lad.upper)
+    assert est.sampled_rows == 0
+    assert est.total_nprod == 0 and est.total_nnz_high == 0
+    assert est.sym_fall_prod == 0 and est.num_fall_prod == 0
+    # Empty rows land on rung 0 — exactly where the device binning puts
+    # zero-size rows, so the admits checks stay consistent.
+    assert est.sym_counts[0] == m and sum(est.sym_counts) == m
+    assert est.num_counts[0] == m
+
+
+def test_derive_estimate_near_2p31_is_int64_safe():
+    # Four rows whose products sum past 2^32: any int32 intermediate
+    # would wrap negative and poison the capacity buckets.
+    big = np.int64(2**30)
+    nprod = np.full(4, big, dtype=np.int64)
+    est = derive_estimate(
+        nprod, np.array([0], dtype=np.int64), np.array([big]),
+        sym_upper=(16, 512), num_upper=(16, 512), ncols=2**31 - 1)
+    assert est.total_nprod == 4 * int(big) > 2**31
+    assert est.total_nnz_high == 4 * int(big)       # r_hi == 1 band
+    assert est.sym_fall_prod == 4 * int(big)        # all rows on fallback
+    assert est.num_fall_prod == 4 * int(big)
+    assert all(c >= 0 for c in est.sym_counts + est.num_counts)
+
+
+# ---------------------------------------------------------------------------
+# Engine integration: estimate-mode cold path.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method,fused,packed", [
+    ("esc", False, False),
+    ("hash", False, False),
+    ("hash", True, True),
+])
+def test_estimate_cold_path_skips_symbolic_sizing(method, fused, packed):
+    A, B = _pair(23)
+    cfg = SpgemmConfig(method=method, fuse_numeric=fused, row_packing=packed,
+                       plan_mode="estimate")
+    engine = SpgemmEngine(cfg)
+    res = engine.execute(A, B)
+    np.testing.assert_allclose(np.asarray(res.C.to_dense()),
+                               np.asarray(spgemm_reference(A, B)),
+                               rtol=1e-4, atol=1e-4)
+    # The full symbolic sizing pass never ran: zero steps calls, one
+    # estimated plan, confirmed by the admitted finalize.
+    assert sum(e.stats.steps_calls for _, e in engine.cache.items()) == 0
+    assert engine.stats.estimates == 1
+    assert engine.stats.estimate_hits == 1
+    assert engine.stats.estimate_misses == 0
+    entry = engine.cache.get((MatrixSig.of(A), MatrixSig.of(B), cfg))
+    assert entry.plan.is_specialized
+    assert not entry.plan.policy.estimated     # cleared on confirm
+    # Cold timings carry the estimate-phase breakdown for benchmarks.
+    assert "estimate" in res.timings and "compile_dispatch" in res.timings
+    # Steady state: the repeat request is served hot with no new trace.
+    before = total_traces()
+    res2 = engine.execute(A, B)
+    assert total_traces() == before
+    assert np.array_equal(np.asarray(res2.C.rpt), np.asarray(res.C.rpt))
+
+
+@pytest.mark.parametrize("method", ["esc", "hash"])
+def test_deliberate_under_estimate_recovers_bitwise(method, monkeypatch):
+    """A lowballed estimate must be caught by the overflow verify and
+    corrected by the grow-and-redo steps oracle — bitwise identical to
+    the exact-mode result, with the miss recorded for calibration."""
+    A, B = _pair(29, da=4.0, db=4.0)
+    exact = SpgemmEngine(SpgemmConfig(method=method)).execute(A, B)
+
+    real = estimate_result
+
+    def lowball(A, B, **kw):
+        est = real(A, B, **kw)
+        return dataclasses.replace(
+            est, total_nnz_high=1, num_fall_prod=0,
+            num_counts=(0,) * len(est.num_counts))
+
+    monkeypatch.setattr(executor_mod, "estimate_result", lowball)
+    cfg = SpgemmConfig(method=method, plan_mode="estimate")
+    engine = SpgemmEngine(cfg)
+    headroom0 = engine.est_state.headroom
+    res = engine.execute(A, B)
+
+    assert engine.stats.estimates == 1
+    assert engine.stats.estimate_misses == 1
+    assert engine.est_state.headroom > headroom0   # calibration learned
+    nnz = exact.total_nnz
+    assert res.total_nnz == nnz
+    assert np.array_equal(np.asarray(res.C.rpt), np.asarray(exact.C.rpt))
+    assert np.array_equal(np.asarray(res.C.col)[:nnz],
+                          np.asarray(exact.C.col)[:nnz])
+    assert np.array_equal(np.asarray(res.C.val)[:nnz],
+                          np.asarray(exact.C.val)[:nnz])
+    # The corrected plan serves the next request without another miss.
+    engine.execute(A, B)
+    assert engine.stats.estimate_misses == 1
+
+
+def test_estimator_prewarm_specializes_without_execution():
+    A, B = _pair(31)
+    cfg = SpgemmConfig(method="hash", plan_mode="estimate")
+    engine = SpgemmEngine(cfg)
+    p = engine.prewarm(A, B)
+    assert p.is_specialized
+    assert p.hash_schedule is not None       # buckets alone can't do this
+    assert p.policy.estimated                # unverified until a finalize
+    assert engine.stats.estimates == 1
+    res = engine.execute(A, B)
+    np.testing.assert_allclose(np.asarray(res.C.to_dense()),
+                               np.asarray(spgemm_reference(A, B)),
+                               rtol=1e-4, atol=1e-4)
+    assert sum(e.stats.steps_calls for _, e in engine.cache.items()) == 0
+    assert engine.stats.estimate_hits == 1
+
+
+def test_prewarm_rejects_half_specified_buckets():
+    A, B = _pair(37)
+    engine = SpgemmEngine()
+    with pytest.raises(ValueError):
+        engine.prewarm(A, B, prod_bucket=256)
+
+
+def test_exact_mode_never_estimates():
+    A, B = _pair(41)
+    engine = SpgemmEngine(SpgemmConfig(method="esc"))
+    engine.execute(A, B)
+    engine.execute(A, B)
+    assert engine.stats.estimates == 0
+
+
+def test_invalid_plan_mode_rejected():
+    A, B = _pair(43)
+    engine = SpgemmEngine()
+    with pytest.raises(ValueError):
+        engine.execute(A, B, SpgemmConfig(plan_mode="guess"))
+
+
+# ---------------------------------------------------------------------------
+# Dump v4 persistence of the estimate-mode plan fields.
+# ---------------------------------------------------------------------------
+
+def test_dump_v4_roundtrips_plan_mode_and_estimated(tmp_path):
+    A, B = _pair(47)
+    cfg = SpgemmConfig(method="hash", plan_mode="estimate")
+    engine = SpgemmEngine(cfg)
+    engine.prewarm(A, B)            # estimated=True persists (no finalize)
+    path = str(tmp_path / "plans.json")
+    engine.cache.dump(path)
+
+    blob = json.load(open(path))
+    assert blob["version"] == 4
+    assert blob["plans"][0]["config"]["plan_mode"] == "estimate"
+    assert blob["plans"][0]["policy"]["estimated"] is True
+
+    fresh = SpgemmEngine(cfg)
+    fresh.cache.load(path)
+    entry = fresh.cache.get((MatrixSig.of(A), MatrixSig.of(B), cfg))
+    assert entry.plan.config.plan_mode == "estimate"
+    assert entry.plan.policy.estimated
+    res = fresh.execute(A, B)       # straight to hot; finalize verifies
+    np.testing.assert_allclose(np.asarray(res.C.to_dense()),
+                               np.asarray(spgemm_reference(A, B)),
+                               rtol=1e-4, atol=1e-4)
+    assert sum(e.stats.steps_calls for _, e in fresh.cache.items()) == 0
+
+
+def test_v3_dump_loads_with_default_plan_fields(tmp_path):
+    A, B = _pair(53)
+    cfg = SpgemmConfig(method="hash")
+    warm = SpgemmEngine(cfg)
+    warm.execute(A, B)
+    warm.execute(A, B)
+    path = str(tmp_path / "plans.json")
+    warm.cache.dump(path)
+
+    blob = json.load(open(path))
+    blob["version"] = 3             # pre-estimate payload: no new fields
+    for p in blob["plans"]:
+        p["config"].pop("plan_mode")
+        if p.get("policy"):
+            p["policy"].pop("estimated")
+    json.dump(blob, open(path, "w"))
+
+    fresh = SpgemmEngine(cfg)
+    assert fresh.cache.load(path) >= 1
+    entry = fresh.cache.get((MatrixSig.of(A), MatrixSig.of(B), cfg))
+    assert entry.plan.config.plan_mode == "exact"    # dataclass default
+    assert entry.plan.policy.estimated is False

@@ -187,6 +187,53 @@ def test_host_schedule_headroom_and_caps():
         assert p >= min(m_cap, 2 * int(s)) and p <= m_cap
 
 
+@pytest.mark.parametrize("dist", ["uniform", "powerlaw"])
+def test_packed_symbolic_matches_unpacked(dist):
+    """Row packing on the STANDALONE symbolic kernel (paper opt. 3): the
+    packed launch — several pow-2 sub-tables per VMEM tile — must agree
+    bitwise with the unpacked kernel and the oracle, on a tiny ladder
+    whose small rungs actually pack (rows_per_block > 1)."""
+    m = 96
+    A, B = _pair(29, m, 160, 120, 8.0, 6.0, dist=dist)
+    nprod = nprod_into_rpt(A, B)[:m]
+    lad = make_ladder((32, 64, 128), 1.2, (32, 64, 128))
+    assert max(lad.rows_per_block) > 1      # packing actually engages
+    bn = bin_rows_for_ladder(nprod, lad)
+    packed = spgemm_hash.symbolic_binned(A, B, bn, lad, prod_capacity=1,
+                                         row_packing=True)
+    unpacked = spgemm_hash.symbolic_binned(A, B, bn, lad, prod_capacity=1,
+                                           row_packing=False)
+    np.testing.assert_array_equal(np.asarray(packed), np.asarray(unpacked))
+    np.testing.assert_array_equal(np.asarray(packed[:m]),
+                                  kref.row_nnz_from_support(A, B))
+
+
+def test_packed_scheduled_symbolic_under_jit():
+    """Schedule-driven packed symbolic (the engine's two-pass hot path
+    form) traces cleanly and matches the oracle; buckets are floored to
+    whole packs so every rung divides into grid steps."""
+    m = 96
+    A, B = _pair(9, m, 200, 150, 10.0, 8.0, dist="powerlaw")
+    nprod = nprod_into_rpt(A, B)[:m]
+    lad = make_ladder((32, 64, 128), 1.2, (32, 64, 128))
+    bn = bin_rows_for_ladder(nprod, lad)
+    row_buckets, fall_cap = spgemm_hash.host_schedule(
+        A, B, bn, lad, packs=lad.rows_per_block)
+    for b, cap in enumerate(row_buckets):
+        if cap and b < len(lad.rows_per_block):
+            assert cap % lad.rows_per_block[b] == 0
+
+    @jax.jit
+    def sym(A, B, bn):
+        return spgemm_hash.symbolic_scheduled(
+            A, B, bn, lad, row_buckets=row_buckets,
+            fallback_prod_capacity=fall_cap, row_packing=True)
+
+    nnz_buf, _, _ = sym(A, B, bn)
+    np.testing.assert_array_equal(np.asarray(nnz_buf[:m]),
+                                  kref.row_nnz_from_support(A, B))
+
+
 def test_numeric_epilogue_sorted_and_complete():
     m, k, n = 32, 32, 32
     A, B = _pair(33, m, k, n, 4.0, 4.0)

@@ -277,7 +277,7 @@ def test_plan_cache_dump_load_roundtrip(tmp_path):
     assert n == len(engine.cache)
 
     blob = json.load(open(path))
-    assert blob["version"] == 3 and len(blob["plans"]) == n
+    assert blob["version"] == 4 and len(blob["plans"]) == n
 
     fresh = PlanCache()
     assert fresh.load(path) == n
@@ -362,7 +362,7 @@ def test_fused_dump_load_roundtrip_through_steady_state(tmp_path):
     warm.cache.dump(path)
 
     blob = json.load(open(path))
-    assert blob["version"] == 3
+    assert blob["version"] == 4
     assert blob["plans"][0]["policy"] is not None   # state persists
 
     fresh = SpgemmEngine(cfg)
