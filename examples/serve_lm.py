@@ -1,13 +1,20 @@
 """Batched serving with continuous batching (per-slot positions).
 
+Also demonstrates the robustness surface: an oversized prompt comes back
+as a structured rejection (``req.error``) instead of killing the engine,
+and the run's telemetry is scraped from a live ``/metrics`` endpoint
+(the same stdlib HTTP server the SpGEMM service uses).
+
 Run:  PYTHONPATH=src python examples/serve_lm.py
 """
 import time
+import urllib.request
 
 import jax
 import numpy as np
 
 from repro.configs import get_arch
+from repro.engine.telemetry import merge_sample_blocks
 from repro.models.model import Model
 from repro.serve.engine import Request, ServingEngine
 
@@ -16,20 +23,67 @@ cfg = get_arch("qwen3-1.7b").reduced().replace(
 model = Model(cfg)
 params = model.init(jax.random.PRNGKey(0))
 
-engine = ServingEngine(model, params, max_batch=4, max_len=96)
+engine = ServingEngine(model, params, max_batch=4, max_len=96,
+                       telemetry=True)
 rng = np.random.default_rng(0)
 n_req = 10
+requests = {}
 for uid in range(n_req):
     plen = int(rng.integers(4, 24))
-    engine.submit(Request(uid=uid,
-                          prompt=rng.integers(0, 1024, plen).astype(np.int32),
-                          max_new_tokens=12))
+    requests[uid] = Request(
+        uid=uid, prompt=rng.integers(0, 1024, plen).astype(np.int32),
+        max_new_tokens=12)
+    engine.submit(requests[uid])
+# One malformed request: its prompt cannot fit the cache.  The engine
+# must reject it structurally and keep serving everyone else.
+requests[n_req] = Request(
+    uid=n_req, prompt=rng.integers(0, 1024, 200).astype(np.int32))
+engine.submit(requests[n_req])
 
 t0 = time.perf_counter()
 results = engine.run()
 dt = time.perf_counter() - t0
+served = [uid for uid in results if requests[uid].error is None]
+rejected = [uid for uid in results if requests[uid].error is not None]
 tokens = sum(len(v) for v in results.values())
-print(f"served {len(results)}/{n_req} requests, {tokens} tokens "
+print(f"served {len(served)}/{n_req + 1} requests "
+      f"({len(rejected)} rejected), {tokens} tokens "
       f"in {dt:.1f}s ({tokens/dt:.1f} tok/s on CPU)")
-for uid in sorted(results)[:3]:
+for uid in sorted(served)[:3]:
     print(f"  req {uid}: {results[uid]}")
+for uid in rejected:
+    print(f"  req {uid}: REJECTED — {requests[uid].error}")
+
+# -- scrape the run's metrics over HTTP ------------------------------------
+# ServingEngine publishes into the same registry machinery as the SpGEMM
+# engines; serve its sample blocks the way SpgemmService does.
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+import threading
+
+
+class _Handler(BaseHTTPRequestHandler):
+    def do_GET(self):
+        body = merge_sample_blocks(
+            [engine.telemetry.registry.sample_blocks()]).encode()
+        self.send_response(200)
+        self.send_header("Content-Type",
+                         "text/plain; version=0.0.4; charset=utf-8")
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def log_message(self, fmt, *args):
+        pass
+
+
+server = ThreadingHTTPServer(("127.0.0.1", 0), _Handler)
+threading.Thread(target=server.serve_forever, daemon=True).start()
+url = f"http://127.0.0.1:{server.server_address[1]}/metrics"
+body = urllib.request.urlopen(url).read().decode()
+server.shutdown()
+server.server_close()
+
+print(f"\n/metrics scrape ({url}):")
+for line in body.splitlines():
+    if line.startswith("opsparse_serve_") or "# TYPE opsparse_serve" in line:
+        print(f"  {line}")

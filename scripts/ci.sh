@@ -57,3 +57,15 @@ echo "== telemetry gate (traced smoke: schema-valid spans, <5% overhead) =="
 # for the trajectory.
 python benchmarks/bench_engine.py --smoke --shards 2 \
     --trace /tmp/opsparse_smoke_trace.json
+
+echo
+echo "== chaos gate (serving front-end: seeded faults, zero failures, parity) =="
+# A mixed-tenant stream runs fault-free, then again under a seeded
+# FaultPlan (lease denials + verify overflows, plus a deterministic
+# double denial that forces the service retry ladder).  Gates: zero
+# failed well-formed requests, every chaos result bitwise identical to
+# its fault-free twin, bounded p99 inflation, a poisoned request errors
+# WITHOUT retrying, a stalled request under deadline returns a
+# structured timeout, and the per-tenant counters appear on a live
+# /metrics scrape.
+python benchmarks/bench_engine.py --smoke --serve

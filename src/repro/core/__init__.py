@@ -13,6 +13,7 @@ from .binning_ranges import (BinLadder, make_ladder, numeric_ladder,
 from .analysis import (compression_ratio, exclusive_sum_in_place,
                        nprod_into_rpt, nprod_per_entry, total_nprod)
 from .spgemm import SpgemmConfig, SpgemmResult, next_bucket, spgemm, spgemm_reference
+from .faults import FaultPlan, FaultSpec, InjectedFault
 from . import esc
 
 __all__ = [
@@ -22,4 +23,5 @@ __all__ = [
     "compression_ratio", "exclusive_sum_in_place", "nprod_into_rpt",
     "nprod_per_entry", "total_nprod", "SpgemmConfig", "SpgemmResult",
     "next_bucket", "spgemm", "spgemm_reference", "esc",
+    "FaultPlan", "FaultSpec", "InjectedFault",
 ]

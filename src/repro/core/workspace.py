@@ -188,7 +188,15 @@ class Arena:
     may force-release (:meth:`forfeit`) from another thread.
     """
 
-    def __init__(self):
+    def __init__(self, *, faults=None):
+        # ``faults`` threads a ``repro.core.faults.FaultPlan`` through the
+        # arena the way ``telemetry=`` rides the engine: a scheduled
+        # ``lease_denial`` makes try_acquire behave as if the cap were
+        # binding, so governor-ladder rungs are exercisable without real
+        # pressure.  (The engine consults its own plan at the same site;
+        # attach a plan to the arena OR the engine, not both, or the
+        # site's visit counter advances twice per acquisition.)
+        self.faults = faults
         self._lock = threading.Lock()
         self._free: Dict[Tuple[str, int], List[jax.Array]] = {}
         self.bytes_in_use = 0
@@ -237,6 +245,9 @@ class Arena:
         worse.  ``device`` pins the buffers (mesh-placed shard operands
         must share their workspace's device); free lists are per-device,
         so a buffer never migrates between devices through the pool."""
+        if self.faults is not None \
+                and self.faults.fire("lease_denial") is not None:
+            return None
         keys = self._buckets(spec, device)
         with self._lock:
             free = [self._free.get(k) for k in keys]

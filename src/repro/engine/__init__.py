@@ -52,8 +52,9 @@ from .plan import (HashSchedule, MatrixSig, PlanKey, SpgemmPlan, plan,
 from .stats import (EngineStats, PlanStats, plan_label, render,
                     total_traces, traces_for)
 from .telemetry import (LATENCY_BUCKETS_S, EventLog, MetricsRegistry, Span,
-                        Telemetry, git_rev, prometheus_text,
-                        resolve_telemetry, utc_now_iso,
+                        Telemetry, engine_sample_blocks, git_rev,
+                        histogram_quantile, merge_sample_blocks,
+                        prometheus_text, resolve_telemetry, utc_now_iso,
                         validate_chrome_trace)
 
 __all__ = [
@@ -67,6 +68,7 @@ __all__ = [
     "MatrixSig", "PlanKey", "SpgemmPlan", "plan", "plan_key", "EngineStats",
     "PlanStats", "plan_label", "render", "total_traces", "traces_for",
     "LATENCY_BUCKETS_S", "EventLog", "MetricsRegistry", "Span", "Telemetry",
-    "git_rev", "prometheus_text", "resolve_telemetry", "utc_now_iso",
-    "validate_chrome_trace",
+    "engine_sample_blocks", "git_rev", "histogram_quantile",
+    "merge_sample_blocks", "prometheus_text", "resolve_telemetry",
+    "utc_now_iso", "validate_chrome_trace",
 ]

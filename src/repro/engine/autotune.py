@@ -427,8 +427,15 @@ class MemoryGovernor:
       4. :class:`~repro.core.workspace.ArenaPressureError` — the caller
          must finalize in-flight work (returning leases) or raise the
          cap; ``SpgemmEngine.drain`` does exactly that before re-raising.
+
+    The serving layer (``repro.serve.spgemm_service``) extends the
+    ladder above rung 4 with request-level rungs (backoff retry, shed
+    sharding, fused->two-pass spill, reject-with-retry-after);
+    ``retry_after_s`` is the backpressure hint a rejected request
+    carries back to its client.
     """
 
     cap_bytes: Optional[int] = None
     trim_under_pressure: bool = True
     spill_fused: bool = True
+    retry_after_s: float = 0.05

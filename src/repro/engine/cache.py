@@ -97,6 +97,16 @@ class PlanCache:
             self.hits += 1
             return entry
 
+    def peek(self, key: PlanKey) -> Optional[CacheEntry]:
+        """Lookup WITHOUT counting a hit/miss or touching LRU order.
+
+        For advisory reads — the serving layer's deadline admission asks
+        "is this plan hot?" before dispatch, and that question must not
+        perturb the hit-rate counters or the eviction order the real
+        ``get`` on the same request is about to establish."""
+        with self._lock:
+            return self._entries.get(key)
+
     def insert(self, plan: SpgemmPlan) -> CacheEntry:
         """Insert a fresh plan (evicting LRU entries over capacity)."""
         with self._lock:

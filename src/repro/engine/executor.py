@@ -53,6 +53,7 @@ from repro.core.binning import bin_rows, bin_rows_for_ladder
 from repro.core.csr import CSR
 from repro.core.spgemm import (AUTO_SHARDS, SpgemmConfig, SpgemmResult,
                                next_bucket)
+from repro.core.faults import FaultPlan, InjectedFault, resolve_faults
 from repro.core.workspace import (Arena, ArenaPressureError, Lease,
                                   default_arena)
 from repro.kernels import spgemm_hash
@@ -561,7 +562,8 @@ class SpgemmEngine:
                  policy: Optional[AdaptivePolicy] = None,
                  telemetry: Union[Telemetry, bool, None] = None,
                  arena: Optional[Arena] = None,
-                 governor: Optional[MemoryGovernor] = None):
+                 governor: Optional[MemoryGovernor] = None,
+                 faults: Optional[FaultPlan] = None):
         assert shards == "auto" or shards >= 1, shards
         self.config = config or SpgemmConfig()
         self.shards = shards
@@ -578,6 +580,11 @@ class SpgemmEngine:
         # spans/events no-op, but the registry still backs EngineStats /
         # the cache counters, so there is exactly ONE set of numbers.
         self.telemetry = resolve_telemetry(telemetry)
+        # Deterministic fault injection (core/faults.py), threaded the
+        # same way: the disabled default costs one attribute read per
+        # site.  Sites: lease_denial (workspace acquisition), verify_
+        # overflow (finalize), executor_raise + slow_dispatch (dispatch).
+        self.faults = resolve_faults(faults)
         self.cache = PlanCache(cache_capacity, telemetry=self.telemetry,
                                arena=self.arena)
         self.stats = EngineStats(registry=self.telemetry.registry)
@@ -892,6 +899,51 @@ class SpgemmEngine:
         g["opsparse_arena_lease_misses_total"].set(a.lease_misses)
         g["opsparse_arena_pressure_events_total"].set(a.pressure_events)
 
+    # -- fault-injection site shims (core/faults.py) ------------------------
+    def _note_fault(self, site: str, uid: int) -> None:
+        self.stats.faults_injected += 1
+        self.telemetry.event("fault_injected", uid=uid, site=site)
+
+    def _consult_dispatch_faults(self, uid: int) -> None:
+        """``executor_raise`` + ``slow_dispatch`` sites, consulted once
+        per user-visible request (shard sub-dispatches excluded — the
+        consult rides the same guard as ``stats.requests``)."""
+        faults = self.faults
+        if not faults.enabled:
+            return
+        spec = faults.fire("executor_raise", uid=uid)
+        if spec is not None:
+            self._note_fault("executor_raise", uid)
+            raise InjectedFault(
+                spec.message or f"injected executor fault (uid={uid})",
+                site="executor_raise", transient=spec.transient)
+        spec = faults.fire("slow_dispatch", uid=uid)
+        if spec is not None and spec.delay_s > 0:
+            self._note_fault("slow_dispatch", uid)
+            time.sleep(spec.delay_s)
+
+    def _try_lease(self, spec, cap, device, uid: int) -> Optional[Lease]:
+        """Arena acquisition with the ``lease_denial`` site in front: an
+        injected denial is indistinguishable from the cap binding, so the
+        governor ladder (and the drain/service backpressure above it)
+        runs for real without real memory pressure.  Each acquisition
+        attempt — including post-reclaim and post-trim retries — is one
+        site visit, so a spec's ``at`` indices control ladder depth."""
+        if self.faults.enabled \
+                and self.faults.fire("lease_denial", uid=uid) is not None:
+            self._note_fault("lease_denial", uid)
+            return None
+        return self.arena.try_acquire(spec, cap, device)
+
+    def _forced_overflow(self, uid: int) -> bool:
+        """``verify_overflow`` site: one visit per hot-path finalize."""
+        if not self.faults.enabled:
+            return False
+        if self.faults.fire("verify_overflow", uid=uid) is None:
+            return False
+        self._note_fault("verify_overflow", uid)
+        return True
+
     def _lease_workspace(self, entry: CacheEntry, uid: int,
                          device=None) -> Tuple[Optional[Lease], bool]:
         """Check the plan's workspace out of the arena, walking the
@@ -907,7 +959,7 @@ class SpgemmEngine:
         if spec is None:
             return None, False
         cap = self.governor.cap_bytes
-        lease = self.arena.try_acquire(spec, cap, device)
+        lease = self._try_lease(spec, cap, device, uid)
         if lease is None:
             # rung 0: the cap is binding — count pressure, drop idle
             # pooled buffers, retry.
@@ -917,7 +969,7 @@ class SpgemmEngine:
                                  want_bytes=spec.nbytes, cap_bytes=cap,
                                  reserved=self.arena.bytes_reserved)
             self.arena.reclaim()
-            lease = self.arena.try_acquire(spec, cap, device)
+            lease = self._try_lease(spec, cap, device, uid)
         if lease is None and self.governor.trim_under_pressure:
             # rung 1: forced headroom trim — re-derive the hash schedule
             # at the policy floor from the streak's observed maxima,
@@ -945,7 +997,7 @@ class SpgemmEngine:
                     spec = entry.plan.workspace_spec()
                     if spec is None:
                         return None, False
-                    lease = self.arena.try_acquire(spec, cap, device)
+                    lease = self._try_lease(spec, cap, device, uid)
         if lease is None and self.governor.spill_fused \
                 and entry.plan.config.method == "hash" \
                 and entry.plan.config.fuse_numeric:
@@ -995,6 +1047,7 @@ class SpgemmEngine:
             config = dataclasses.replace(config, shards=1)
         if not _sub:       # shard sub-dispatches aren't user requests
             self.stats.requests += 1
+            self._consult_dispatch_faults(uid)
         t0 = time.perf_counter()
         tel = self.telemetry
         # The request (or, under the sharded fan-out, per-shard) span
@@ -1123,6 +1176,7 @@ class SpgemmEngine:
         """
         self.stats.requests += 1
         self.stats.sharded_requests += 1
+        self._consult_dispatch_faults(uid)
         t0 = time.perf_counter()
         tel = self.telemetry
         span = tel.start_span("request", uid=uid, method=config.method,
@@ -1287,7 +1341,8 @@ class SpgemmEngine:
             if not schedule_ok:
                 self.stats.bin_overflows += 1
                 rec.entry.stats.bin_overflows += 1
-            if not schedule_ok or total_nnz > plan.nnz_bucket:
+            if not schedule_ok or total_nnz > plan.nnz_bucket \
+                    or self._forced_overflow(rec.uid):
                 return self._grow_and_redo(rec, total_nprod, total_nnz,
                                            schedule_overflow=not schedule_ok)
             self._note_hash_admit(rec, fetched[2], fetched[3])
@@ -1306,7 +1361,8 @@ class SpgemmEngine:
             if not schedule_ok:
                 self.stats.bin_overflows += 1
                 rec.entry.stats.bin_overflows += 1
-            if not schedule_ok or total_nnz > plan.nnz_bucket:
+            if not schedule_ok or total_nnz > plan.nnz_bucket \
+                    or self._forced_overflow(rec.uid):
                 return self._grow_and_redo(rec, total_nprod, total_nnz,
                                            schedule_overflow=not schedule_ok)
             self._note_hash_admit(rec, fetched[2], fetched[4],
@@ -1318,7 +1374,8 @@ class SpgemmEngine:
                     int(x) for x in jax.device_get((tnp, tnz)))
             self._release_ws(rec)    # sync done: the workspace is idle
             if (total_nprod > plan.prod_bucket
-                    or total_nnz > plan.nnz_bucket):
+                    or total_nnz > plan.nnz_bucket
+                    or self._forced_overflow(rec.uid)):
                 return self._grow_and_redo(rec, total_nprod, total_nnz)
             # ESC plans carry no hash schedule, so the estimate
             # confirmation doesn't ride _note_hash_admit — clear the

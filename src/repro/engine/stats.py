@@ -157,6 +157,7 @@ class EngineStats(_RegistryStats):
     estimates         cold plans specialized from the sampling estimator
     estimate_hits     estimated plans confirmed by an admitted finalize
     estimate_misses   estimated plans corrected by an overflow retrace
+    faults_injected   scheduled FaultPlan injections this engine consumed
     """
 
     _PREFIX = "opsparse_engine_"
@@ -164,7 +165,8 @@ class EngineStats(_RegistryStats):
                  "drains", "sharded_requests", "shard_grows", "reordered",
                  "auto_requests", "policy_revisions", "schedule_trims",
                  "arena_pressure", "arena_trims", "arena_spills",
-                 "estimates", "estimate_hits", "estimate_misses")
+                 "estimates", "estimate_hits", "estimate_misses",
+                 "faults_injected")
     _GAUGES = ("peak_inflight",)
 
 
@@ -205,6 +207,9 @@ def render(engine) -> str:
         "%d schedule trims" % (
             s.auto_requests, s.policy_revisions, s.schedule_trims),
     ]
+    if s.faults_injected:
+        lines.append("faults: %d scheduled injections consumed"
+                     % s.faults_injected)
     if s.estimates:
         est = getattr(engine, "est_state", None)
         lines.append(

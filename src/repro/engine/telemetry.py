@@ -183,6 +183,20 @@ class MetricsRegistry:
     def render_prometheus(self) -> str:
         return "\n".join(self.render_lines()) + "\n"
 
+    def sample_blocks(self, labels: str = ""
+                      ) -> "Dict[str, Tuple[str, List[str]]]":
+        """``name -> (kind, sample lines)`` for every metric, with
+        ``labels`` merged into each sample.  Blocks from several
+        registries (one per tenant engine, say) merge under a single
+        TYPE header per name via :func:`merge_sample_blocks` — repeated
+        TYPE lines are invalid exposition text."""
+        out: "Dict[str, Tuple[str, List[str]]]" = {}
+        with self._lock:
+            items = sorted(self._metrics.items())
+        for name, m in items:
+            out[name] = (m.kind, render_metric_samples(name, m, labels))
+        return out
+
 
 def _labelset(*parts: str) -> str:
     inner = ",".join(p for p in parts if p)
@@ -209,6 +223,54 @@ def render_metric_samples(name: str, metric, labels: str = "") -> List[str]:
     return [f"{name}{_labelset(labels)} {metric.value:g}"
             if isinstance(metric.value, float)
             else f"{name}{_labelset(labels)} {metric.value}"]
+
+
+def histogram_quantile(hist: Optional[Histogram], q: float
+                       ) -> Optional[float]:
+    """Conservative quantile estimate from a fixed-bucket histogram.
+
+    Returns the smallest bucket upper edge whose cumulative count covers
+    a ``q`` fraction of observations — the Prometheus
+    ``histogram_quantile`` discipline, rounded UP to the edge, which is
+    the right bias for deadline admission (over-predicting latency sheds
+    a request early; under-predicting wastes its whole budget).  Empty
+    or missing histograms return ``None`` (caller must admit blind);
+    observations landing in the +Inf overflow bucket resolve to twice
+    the top edge as a finite pessimistic stand-in.
+    """
+    if hist is None or not hist.count:
+        return None
+    target = max(0.0, min(1.0, q)) * hist.count
+    cum = 0
+    for edge, c in zip(hist.buckets, hist.counts):
+        cum += c
+        if cum >= target:
+            return edge
+    return 2.0 * hist.buckets[-1]
+
+
+def merge_sample_blocks(
+        blocks_list: "Iterable[Dict[str, Tuple[str, List[str]]]]") -> str:
+    """Merge per-source sample blocks into one exposition document.
+
+    Each source (a tenant engine, the service's own registry) renders
+    its samples with its own label set; this emits ONE ``# TYPE`` header
+    per metric name followed by every source's samples for that name.
+    """
+    merged: "Dict[str, Tuple[str, List[str]]]" = {}
+    for blocks in blocks_list:
+        for name, (kind, samples) in blocks.items():
+            have = merged.get(name)
+            if have is None:
+                merged[name] = (kind, list(samples))
+            else:
+                have[1].extend(samples)
+    lines: List[str] = []
+    for name in sorted(merged):
+        kind, samples = merged[name]
+        lines.append(f"# TYPE {name} {kind}")
+        lines.extend(samples)
+    return "\n".join(lines) + "\n"
 
 
 # ---------------------------------------------------------------------------
@@ -563,13 +625,16 @@ def git_rev(cwd=None) -> str:
 # Prometheus endpoint rendering for a whole engine.
 # ---------------------------------------------------------------------------
 
-def prometheus_text(engine) -> str:
-    """Prometheus exposition text for one :class:`SpgemmEngine`.
+def engine_sample_blocks(engine, labels: str = ""
+                         ) -> "Dict[str, Tuple[str, List[str]]]":
+    """Sample blocks (``name -> (kind, lines)``) for one engine.
 
     Combines the engine registry (EngineStats counters, latency
     histograms), plan-cache counters, per-plan counters labeled by plan,
-    and event-log accounting.  This is the text a serving front-end's
-    ``/metrics`` endpoint returns verbatim.
+    and event-log accounting, with ``labels`` (e.g. ``tenant="acme"``)
+    merged into every sample.  The serving front-end merges one block
+    set per tenant engine into a single scrape document via
+    :func:`merge_sample_blocks`.
     """
     tel = engine.telemetry
     cache = engine.cache
@@ -581,39 +646,41 @@ def prometheus_text(engine) -> str:
     refresh = getattr(engine, "_update_arena_gauges", None)
     if refresh is not None:
         refresh()
-    lines = tel.registry.render_lines()
+    blocks = tel.registry.sample_blocks(labels)
 
-    lines += [
-        "# TYPE opsparse_plan_cache_hits_total counter",
-        f"opsparse_plan_cache_hits_total {cache.hits}",
-        "# TYPE opsparse_plan_cache_misses_total counter",
-        f"opsparse_plan_cache_misses_total {cache.misses}",
-        "# TYPE opsparse_plan_cache_evictions_total counter",
-        f"opsparse_plan_cache_evictions_total {cache.evictions}",
-        "# TYPE opsparse_plan_cache_size gauge",
-        f"opsparse_plan_cache_size {len(cache)}",
-        "# TYPE opsparse_plan_cache_capacity gauge",
-        f"opsparse_plan_cache_capacity {cache.capacity}",
-        "# TYPE opsparse_telemetry_events_appended_total counter",
-        f"opsparse_telemetry_events_appended_total {tel.events.appended}",
-        "# TYPE opsparse_telemetry_events_dropped_total counter",
-        f"opsparse_telemetry_events_dropped_total {tel.events.dropped}",
-    ]
+    for name, kind, value in (
+            ("opsparse_plan_cache_hits_total", "counter", cache.hits),
+            ("opsparse_plan_cache_misses_total", "counter", cache.misses),
+            ("opsparse_plan_cache_evictions_total", "counter",
+             cache.evictions),
+            ("opsparse_plan_cache_size", "gauge", len(cache)),
+            ("opsparse_plan_cache_capacity", "gauge", cache.capacity),
+            ("opsparse_telemetry_events_appended_total", "counter",
+             tel.events.appended),
+            ("opsparse_telemetry_events_dropped_total", "counter",
+             tel.events.dropped),
+    ):
+        blocks.setdefault(name, (kind, []))[1].append(
+            f"{name}{_labelset(labels)} {value}")
 
-    # Per-plan counters: ONE TYPE header per metric name, then a sample
-    # per plan label (repeated TYPE lines are invalid exposition text).
+    # Per-plan counters: a sample per plan label under one shared name.
     entries = list(cache.items())
     if entries:
         from .stats import PlanStats, plan_label  # local: stats imports us
-        per_metric: "Dict[str, List[str]]" = {}
         for _, entry in entries:
-            label = f'plan="{plan_label(entry.plan)}"'
+            label = ",".join(p for p in (
+                labels, f'plan="{plan_label(entry.plan)}"') if p)
             for field in PlanStats._COUNTERS:
                 name = entry.stats.metric_name(field)
-                per_metric.setdefault(name, []).extend(
+                blocks.setdefault(name, ("counter", []))[1].extend(
                     render_metric_samples(
                         name, entry.stats.metric(field), label))
-        for name in sorted(per_metric):
-            lines.append(f"# TYPE {name} counter")
-            lines.extend(per_metric[name])
-    return "\n".join(lines) + "\n"
+    return blocks
+
+
+def prometheus_text(engine) -> str:
+    """Prometheus exposition text for one :class:`SpgemmEngine` (the
+    single-tenant view: :func:`engine_sample_blocks` with no labels).
+    This is the text a serving front-end's ``/metrics`` endpoint returns
+    verbatim; the multi-tenant service merges labeled blocks instead."""
+    return merge_sample_blocks([engine_sample_blocks(engine)])

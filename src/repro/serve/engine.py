@@ -32,6 +32,7 @@ class Request:
     eos_id: Optional[int] = None
     output: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    error: Optional[str] = None      # set on structured rejection
 
 
 class ServingEngine:
@@ -50,6 +51,7 @@ class ServingEngine:
         self.telemetry = resolve_telemetry(telemetry)
         reg = self.telemetry.registry
         self._ctr_requests = reg.counter("opsparse_serve_requests_total")
+        self._ctr_rejected = reg.counter("opsparse_serve_rejected_total")
         self._ctr_tokens = reg.counter("opsparse_serve_tokens_total")
         self._hist_prefill = reg.histogram("opsparse_serve_prefill_seconds")
         self._hist_decode = reg.histogram(
@@ -68,25 +70,46 @@ class ServingEngine:
         self.queue.append(req)
 
     def run(self, max_steps: int = 1000) -> Dict[int, List[int]]:
-        """Drive until queue + slots drain (or step budget)."""
+        """Drive until queue + slots drain (or step budget).
+
+        Rejected requests (e.g. a prompt that cannot fit ``max_len``)
+        appear in the results with their (empty) output and a set
+        ``req.error`` — a malformed request is the CLIENT's failure,
+        and it must not take the engine down for everyone else's.
+        """
         results: Dict[int, List[int]] = {}
         for _ in range(max_steps):
-            self._fill_slots()
+            self._fill_slots(results)
             if not any(s is not None for s in self.slots):
                 break
             self._decode_once(results)
         return results
 
     # -- internals ----------------------------------------------------------
-    def _fill_slots(self):
+    def _fill_slots(self, results: Dict[int, List[int]]):
         for i in range(self.max_batch):
-            if self.slots[i] is None and self.queue:
+            # A rejected request frees its slot immediately — keep
+            # pulling from the queue until a request actually lands (or
+            # the queue drains) so one bad request can't idle the slot
+            # for a whole decode step.
+            while self.slots[i] is None and self.queue:
                 req = self.queue.popleft()
-                self._prefill_into_slot(i, req)
+                if self._prefill_into_slot(i, req):
+                    break
+                results[req.uid] = req.output
 
-    def _prefill_into_slot(self, i: int, req: Request):
+    def _prefill_into_slot(self, i: int, req: Request) -> bool:
+        """Prefill ``req`` into slot ``i``; False = structured rejection
+        (the request is marked done-with-error, the engine keeps going)."""
         plen = len(req.prompt)
-        assert plen < self.max_len
+        if plen >= self.max_len:
+            req.error = (f"prompt length {plen} >= max_len "
+                         f"{self.max_len}; request rejected")
+            req.done = True
+            self._ctr_rejected.inc()
+            self.telemetry.event("serve_reject", uid=req.uid,
+                                 prompt_len=plen, max_len=self.max_len)
+            return False
         self._ctr_requests.inc()
         with self.telemetry.span("serve.prefill", uid=req.uid,
                                  slot=i, prompt_len=plen) as span:
@@ -101,6 +124,7 @@ class ServingEngine:
         self.pos[i] = plen
         self.last_token[i, 0] = tok
         req.output.append(tok)
+        return True
 
     def _write_slot_cache(self, i: int, caches):
         """Copy a 1-sequence prefill cache into batch slot i."""

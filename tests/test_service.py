@@ -1,0 +1,314 @@
+"""Fault-tolerant serving front-end tests (serve/spgemm_service.py).
+
+Exercises the request-level robustness contract over the deterministic
+fault-injection layer (core/faults.py): injected lease denials walk the
+retry ladder and recover BITWISE, injected verify overflows redo through
+the steps oracle, deadlines return structured timeouts, non-transient
+faults never retry, and per-tenant plan caches keep one tenant's churn
+from evicting another's plans.  Everything runs the ESC method (cheap
+jnp compiles) so the suite stays fast.
+"""
+import re
+import urllib.request
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import SpgemmConfig, random_csr
+from repro.core.faults import (FaultPlan, FaultSpec, InjectedFault,
+                               NULL_FAULTS, resolve_faults)
+from repro.core.workspace import Arena, ArenaPressureError
+from repro.engine import MemoryGovernor, SpgemmEngine
+from repro.engine.telemetry import Histogram, histogram_quantile
+from repro.serve import ServiceResult, SpgemmService
+
+CFG = SpgemmConfig(method="esc")
+
+
+def _pair(seed, m=48, k=48, n=48, avg=4.0):
+    A = random_csr(jax.random.PRNGKey(seed), m, k, avg_nnz_per_row=avg)
+    B = random_csr(jax.random.PRNGKey(seed + 1), k, n, avg_nnz_per_row=avg)
+    return A, B
+
+
+def _assert_bitwise(r, ref):
+    """Both results carry identical CSR payloads, bit for bit."""
+    np.testing.assert_array_equal(np.asarray(r.C.rpt),
+                                  np.asarray(ref.C.rpt))
+    nnz = int(np.asarray(ref.C.rpt)[-1])
+    np.testing.assert_array_equal(np.asarray(r.C.col)[:nnz],
+                                  np.asarray(ref.C.col)[:nnz])
+    np.testing.assert_array_equal(np.asarray(r.C.val)[:nnz],
+                                  np.asarray(ref.C.val)[:nnz])
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan scheduling semantics.
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_at_indices_fire_deterministically():
+    fp = FaultPlan([FaultSpec(site="lease_denial", at=(1, 3))])
+    hits = [fp.fire("lease_denial") is not None for _ in range(5)]
+    assert hits == [False, True, False, True, False]
+    snap = fp.snapshot()
+    assert snap["visits"]["lease_denial"] == 5
+    assert snap["injected"]["lease_denial"] == 2
+
+
+def test_fault_plan_probability_is_seed_deterministic():
+    def run(seed):
+        fp = FaultPlan([FaultSpec(site="executor_raise", probability=0.5)],
+                       seed=seed)
+        return [fp.fire("executor_raise") is not None for _ in range(32)]
+
+    assert run(7) == run(7)
+    assert run(7) != run(8)        # astronomically unlikely to collide
+
+
+def test_fault_plan_count_bounds_injections():
+    fp = FaultPlan([FaultSpec(site="verify_overflow", at=(0, 1, 2),
+                              count=2)])
+    hits = [fp.fire("verify_overflow") is not None for _ in range(4)]
+    assert hits == [True, True, False, False]
+
+
+def test_fault_plan_validation_and_resolve():
+    with pytest.raises(ValueError):
+        FaultSpec(site="nope")
+    with pytest.raises(TypeError):
+        resolve_faults("not a plan")
+    assert resolve_faults(None) is NULL_FAULTS
+    assert not NULL_FAULTS.enabled
+    assert NULL_FAULTS.fire("lease_denial") is None
+
+
+def test_histogram_quantile_conservative_edges():
+    h = Histogram(buckets=(0.1, 0.2, 0.4))
+    assert histogram_quantile(h, 0.99) is None      # empty: no basis
+    for v in (0.05, 0.15, 0.15, 0.3):
+        h.observe(v)
+    assert histogram_quantile(h, 0.5) == 0.2        # rounded UP to edge
+    assert histogram_quantile(h, 1.0) == 0.4
+    h.observe(9.0)                                  # +Inf overflow bucket
+    assert histogram_quantile(h, 1.0) == 0.8        # 2x top edge stand-in
+
+
+# ---------------------------------------------------------------------------
+# Engine-level injection: denial walks the real ladder, overflow redoes.
+# ---------------------------------------------------------------------------
+
+def test_injected_lease_denial_drains_and_retries_bitwise():
+    A, B = _pair(0)
+    ref = SpgemmEngine(CFG, arena=Arena()).execute(A, B)
+
+    # Visits advance once per successful acquisition, once per ladder
+    # attempt when denied.  Deny BOTH attempts of the second hot call
+    # (visits: cold call=none, hot#1=1, hot#2 initial=2 + post-reclaim=3)
+    # while work is queued: drain reaps the in-flight request to free
+    # its lease and retries, so the batch still completes — bitwise.
+    fp = FaultPlan([FaultSpec(site="lease_denial", at=(2, 3))])
+    eng = SpgemmEngine(CFG, arena=Arena(), faults=fp)
+    eng.execute(A, B)              # cold: specializes the plan
+    eng.execute(A, B)              # hot #1: visit 1
+    for _ in range(3):
+        eng.submit(A, B)
+    results = eng.drain()
+    assert len(results) == 3
+    for r in results.values():
+        _assert_bitwise(r, ref)
+    assert fp.injected["lease_denial"] == 2
+    assert eng.stats.faults_injected == 2
+
+
+def test_injected_verify_overflow_recovers_bitwise():
+    A, B = _pair(2)
+    ref = SpgemmEngine(CFG, arena=Arena()).execute(A, B)
+
+    fp = FaultPlan([FaultSpec(site="verify_overflow", at=(0,))])
+    eng = SpgemmEngine(CFG, arena=Arena(), faults=fp)
+    eng.execute(A, B)              # cold: no verify visit
+    grows_before = eng.stats.capacity_grows
+    r = eng.execute(A, B)          # hot: forced overflow -> steps redo
+    _assert_bitwise(r, ref)
+    assert fp.injected["verify_overflow"] == 1
+    assert eng.stats.capacity_grows > grows_before
+    r2 = eng.execute(A, B)         # next call is clean again
+    _assert_bitwise(r2, ref)
+
+
+def test_injected_executor_raise_classification():
+    A, B = _pair(4)
+    fp = FaultPlan([FaultSpec(site="executor_raise", at=(0,),
+                              message="poisoned")])
+    eng = SpgemmEngine(CFG, arena=Arena(), faults=fp)
+    with pytest.raises(InjectedFault, match="poisoned") as exc_info:
+        eng.execute(A, B)
+    assert not exc_info.value.transient
+    # The engine survives the injected failure: next request succeeds.
+    ref = SpgemmEngine(CFG, arena=Arena()).execute(A, B)
+    _assert_bitwise(eng.execute(A, B), ref)
+
+
+# ---------------------------------------------------------------------------
+# Service-level contract.
+# ---------------------------------------------------------------------------
+
+def test_service_retries_injected_pressure_bitwise():
+    A, B = _pair(6)
+    ref = SpgemmService(CFG, arena=Arena()).call(A, B).value
+
+    fp = FaultPlan([FaultSpec(site="lease_denial", at=(1, 2))])
+    svc = SpgemmService(CFG, arena=Arena(), faults=fp,
+                        backoff_base_s=1e-4)
+    svc.call(A, B)                 # cold
+    svc.call(A, B)                 # hot: visit 0 (clean)
+    r = svc.call(A, B)             # hot: both attempts denied -> retry
+    assert r.ok and r.retries == 1 and r.degraded == "reclaim"
+    assert r.faults_survived == 2
+    _assert_bitwise(r.value, ref)
+    text = svc.prometheus_text()
+    assert re.search(
+        r'opsparse_service_retries_total\{tenant="default"\} 1', text)
+    assert re.search(
+        r'opsparse_service_faults_survived_total\{tenant="default"\} 2',
+        text)
+
+
+def test_service_nontransient_fault_does_not_retry():
+    A, B = _pair(8)
+    fp = FaultPlan([FaultSpec(site="executor_raise", at=(0,),
+                              message="poisoned request")])
+    svc = SpgemmService(CFG, arena=Arena(), faults=fp)
+    r = svc.call(A, B)
+    assert r.status == "error" and not r.ok
+    assert r.retries == 0          # fatal => exactly one attempt
+    assert "poisoned request" in r.error
+    assert fp.injected["executor_raise"] == 1
+    # The tenant keeps serving after the poisoned request.
+    assert svc.call(A, B).ok
+
+
+def test_service_transient_fault_retries_and_succeeds():
+    A, B = _pair(10)
+    fp = FaultPlan([FaultSpec(site="executor_raise", at=(0,),
+                              transient=True, message="blip")])
+    svc = SpgemmService(CFG, arena=Arena(), faults=fp,
+                        backoff_base_s=1e-4)
+    r = svc.call(A, B)
+    assert r.ok and r.retries == 1
+    assert r.faults_survived == 1
+
+
+def test_service_deadline_admission_and_expiry():
+    A, B = _pair(12)
+    svc = SpgemmService(CFG, arena=Arena())
+    assert svc.call(A, B).ok       # calibrates cold_s_per_flop
+
+    # Up-front rejection: predicted latency exceeds an absurd budget.
+    r = svc.call(_pair(14)[0], _pair(14)[1], deadline_s=1e-9)
+    assert r.status == "timeout" and r.value is None
+    assert "predicted" in r.error
+
+    # Expiry during the request: an injected stall on a known-hot plan
+    # admits (steady-state quantile is tiny) but blows the budget.
+    fp = FaultPlan([FaultSpec(site="slow_dispatch", at=(1,),
+                              delay_s=0.3)])
+    svc2 = SpgemmService(CFG, arena=Arena(), faults=fp)
+    assert svc2.call(A, B).ok      # builds latency history
+    r = svc2.call(A, B, deadline_s=0.05)
+    assert r.status == "timeout"
+    text = svc2.prometheus_text()
+    assert re.search(
+        r'opsparse_service_timeouts_total\{tenant="default"\} 1', text)
+
+
+def test_service_never_raises():
+    A, B = _pair(16)
+    # Every site armed at once, repeatedly; no exception may escape.
+    fp = FaultPlan([
+        FaultSpec(site="lease_denial", probability=0.3),
+        FaultSpec(site="verify_overflow", probability=0.3),
+        FaultSpec(site="executor_raise", probability=0.2, transient=True),
+        FaultSpec(site="slow_dispatch", probability=0.2, delay_s=0.001),
+    ], seed=3)
+    svc = SpgemmService(CFG, arena=Arena(), faults=fp,
+                        backoff_base_s=1e-4)
+    statuses = [svc.call(A, B, deadline_s=30.0).status for _ in range(8)]
+    assert set(statuses) <= {"ok", "timeout", "rejected", "error"}
+
+
+def test_service_per_tenant_cache_isolation():
+    # Tenant "small" has one plan; tenant "churn" floods its OWN cache
+    # past capacity.  Isolation: churn's evictions never touch small's
+    # plan, and the shared arena stays bounded by one governor.
+    A, B = _pair(18)
+    svc = SpgemmService(CFG, arena=Arena(), cache_capacity=2,
+                        governor=MemoryGovernor(cap_bytes=256 << 20))
+    assert svc.call(A, B, tenant="small").ok
+    for i, m in enumerate((16, 24, 40, 72, 136)):   # distinct pow-2 sigs
+        assert svc.call(*_pair(20 + i, m=m), tenant="churn").ok
+    churn_engine = svc.engine("churn")
+    small_engine = svc.engine("small")
+    assert churn_engine.cache.evictions > 0
+    assert small_engine.cache.evictions == 0
+    assert len(small_engine.cache) == 1
+    # And the hot path still works for the quiet tenant.
+    assert svc.call(A, B, tenant="small").ok
+
+
+def test_service_tenant_roster_admission():
+    A, B = _pair(30)
+    svc = SpgemmService(CFG, arena=Arena(), max_tenants=2)
+    assert svc.call(A, B, tenant="a").ok
+    assert svc.call(A, B, tenant="b").ok
+    r = svc.call(A, B, tenant="c")
+    assert r.status == "rejected" and r.retry_after_s is not None
+    with pytest.raises(RuntimeError):
+        svc.engine("d")
+    assert svc.tenants() == ["a", "b"]
+
+
+def test_service_session_batches():
+    A, B = _pair(32)
+    svc = SpgemmService(CFG, arena=Arena())
+    ref = svc.call(A, B).value
+    with svc.session() as sess:
+        uids = [sess.submit(A, B) for _ in range(3)]
+        results = sess.drain()
+    assert sorted(results) == sorted(uids)
+    for r in results.values():
+        _assert_bitwise(r, ref)
+
+
+def test_service_http_metrics_endpoint():
+    A, B = _pair(34)
+    svc = SpgemmService(CFG, arena=Arena())
+    svc.call(A, B, tenant="acme")
+    svc.call(A, B, tenant="zeta")
+    server = svc.serve_http()
+    try:
+        body = urllib.request.urlopen(server.url, timeout=10).read().decode()
+        health = urllib.request.urlopen(
+            server.url.replace("/metrics", "/healthz"), timeout=10).read()
+    finally:
+        svc.close()
+    assert health == b"ok\n"
+    assert 'opsparse_service_requests_total{tenant="acme"} 1' in body
+    assert 'opsparse_service_requests_total{tenant="zeta"} 1' in body
+    assert 'opsparse_engine_requests_total{tenant="acme"}' in body
+    assert "opsparse_service_tenants 2" in body
+    # Valid exposition shape: one TYPE header per metric name.
+    for name in ("opsparse_service_requests_total",
+                 "opsparse_engine_requests_total"):
+        assert body.count(f"# TYPE {name} ") == 1
+
+
+# ---------------------------------------------------------------------------
+# ServingEngine structured rejection (serve/engine.py satellite) is in
+# tests/test_serving.py next to the other LM-serving tests.
+# ---------------------------------------------------------------------------
+
+def test_service_result_ok_property():
+    assert ServiceResult(status="ok", tenant="t").ok
+    assert not ServiceResult(status="timeout", tenant="t").ok

@@ -71,3 +71,28 @@ def test_engine_eos_stops_early(tiny_lm):
                         max_new_tokens=8, eos_id=first[1]))
     out = eng2.run()[1]
     assert out[1] == first[1] and len(out) == 2
+
+
+def test_engine_rejects_oversized_prompt_structurally(tiny_lm):
+    """A prompt that can't fit max_len is rejected with ``req.error``
+    set — the engine keeps serving the well-formed requests around it."""
+    model, params = tiny_lm
+    eng = ServingEngine(model, params, max_batch=2, max_len=16,
+                        telemetry=True)
+    rng = np.random.default_rng(1)
+    good = [Request(uid=0, prompt=rng.integers(0, 50, 4).astype(np.int32),
+                    max_new_tokens=3),
+            Request(uid=2, prompt=rng.integers(0, 50, 5).astype(np.int32),
+                    max_new_tokens=3)]
+    bad = Request(uid=1, prompt=rng.integers(0, 50, 40).astype(np.int32))
+    eng.submit(good[0])
+    eng.submit(bad)            # between two well-formed requests
+    eng.submit(good[1])
+    results = eng.run()
+    assert sorted(results) == [0, 1, 2]
+    assert results[1] == [] and bad.done
+    assert bad.error is not None and "max_len" in bad.error
+    assert all(len(results[r.uid]) == 3 and r.error is None for r in good)
+    reg = eng.telemetry.registry
+    assert reg.counter("opsparse_serve_rejected_total").value == 1
+    assert reg.counter("opsparse_serve_requests_total").value == 2
