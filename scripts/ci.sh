@@ -9,6 +9,17 @@ echo "== tier-1 tests =="
 python -m pytest -x -q
 
 echo
+echo "== opslint gate (static analysis: fail on NEW findings vs baseline) =="
+# AST-only — no JAX execution, so it runs ahead of the bench gates.
+# Rules: trace-safety (TRC), donation discipline (DON), lock order /
+# guarded-by races (LCK), host-int width (INT), kernel budgets (KRN).
+# `--fail-on-new` diffs against the checked-in opslint_baseline.json;
+# refresh it with `scripts/opslint --write-baseline opslint_baseline.json`
+# only after triaging (fix true positives, suppress documented FPs).
+python -m repro.analysis_static src/repro --fail-on-new \
+    --baseline opslint_baseline.json --format json
+
+echo
 echo "== engine smoke benchmark (plan-cache effectiveness) =="
 python benchmarks/bench_engine.py --smoke
 

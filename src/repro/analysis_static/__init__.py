@@ -1,0 +1,56 @@
+"""opslint — static analysis for the OpSparse SpGEMM engine.
+
+An AST-based rule engine over ``src/repro`` that mechanically checks
+the invariants this repo otherwise enforces by convention and review:
+
+* **trace-safety** (``TRC001``/``TRC002``) — no host syncs and no
+  data-dependent Python branching inside functions reachable from the
+  jitted steady-state call graph (seeded from ``jax.jit`` /
+  ``pallas_call`` sites, propagated through a conservative
+  intra-package call graph with per-call-site taint).
+* **donation discipline** (``DON001``) — a binding passed in a
+  ``donate_argnums`` position is consumed by XLA; any later read of
+  that binding aliases freed memory (the PR 7 arena-alias contract).
+* **lock order / races** (``LCK001``/``LCK002``) — a lock graph built
+  from ``threading.Lock``/``RLock`` acquisitions reports ordering
+  cycles, and writes to fields annotated ``# guarded-by: <lock>``
+  outside a ``with`` of that lock are flagged.
+* **host-int width** (``INT001``) — numpy int32-producing expressions
+  flowing unwidened into capacity/flop/byte accumulators (automates
+  the PR 5 manual audit).
+* **kernel budget** (``KRN001``/``KRN002``) — Pallas tile shapes and
+  bucket constants that violate the pow-2 / ``PACK_TILE_ENTRIES``
+  VMEM invariants.
+
+CLI::
+
+    python -m repro.analysis_static src/repro --fail-on-new \
+        --baseline opslint_baseline.json --format json
+
+Findings carry ``file:line``, a rule id, and a fix hint.  A checked-in
+baseline makes CI fail only on *new* findings; false positives are
+suppressed inline with ``# opslint: disable=<rule> -- reason``.
+"""
+
+from .core import (  # noqa: F401
+    Finding,
+    Project,
+    SourceFile,
+    load_baseline,
+    load_project,
+    save_baseline,
+)
+from .engine import ALL_RULES, diff_against_baseline, run_paths, run_project  # noqa: F401
+
+__all__ = [
+    "Finding",
+    "Project",
+    "SourceFile",
+    "ALL_RULES",
+    "run_paths",
+    "run_project",
+    "load_project",
+    "load_baseline",
+    "save_baseline",
+    "diff_against_baseline",
+]

@@ -1,0 +1,701 @@
+"""Conservative intra-package call graph seeded from jit / pallas sites.
+
+The trace-safety and donation rules need to know (a) which functions
+execute *under a JAX trace* in the steady state, and (b) which of their
+parameters carry traced values (vs. static host config).  Both are
+answered here without importing the package:
+
+* **Seeds** — functions decorated ``@jax.jit`` / ``@partial(jax.jit,
+  ...)``, functions wrapped at call sites (``name = jax.jit(fn, ...)``,
+  ``return jax.jit(body)``), and kernels handed to
+  ``pl.pallas_call(kernel, ...)``.  ``static_argnames`` /
+  ``static_argnums`` mark host parameters; ``donate_argnums`` feeds the
+  donation registry.
+* **Propagation** — inside a traced function, a call to a function we
+  can resolve (same scope chain, same module, or an imported repro
+  module) marks the callee traced too.  Taint is per *call site*: only
+  parameters that actually receive traced arguments become traced, so a
+  schedule tuple threaded through a traced driver stays static and
+  ``if not rows_cap:`` branches on it are not flagged.
+
+Resolution is deliberately conservative: higher-order flow other than
+the explicit jit/pallas wrappers is not followed, attribute loads off
+traced objects are treated as static (CSR metadata like ``A.nrows`` is
+aux data under jit), and unresolvable calls add no edges.
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from .core import Project, SourceFile
+
+# Module names whose call results are traced values inside a jit region.
+_TRACED_NAMESPACES = {
+    "jax", "jax.numpy", "jax.lax", "jax.nn", "jax.scipy",
+    "jax.experimental.pallas", "jax.experimental.pallas.tpu",
+}
+
+# Host coercions: their *call* is a trace hazard (TRC001 reports it) but
+# the result is a host value, so taint does not flow through them.
+_HOST_COERCIONS = {"int", "float", "bool", "len", "str"}
+
+
+@dataclass(eq=False)
+class FuncInfo:
+    """One function or method definition anywhere in the project."""
+
+    node: ast.AST                      # FunctionDef / AsyncFunctionDef
+    sf: SourceFile
+    qualname: str                      # "Class.method" / "outer.inner"
+    cls: Optional[str] = None          # enclosing class name, if a method
+
+    @property
+    def name(self) -> str:
+        return self.node.name
+
+    @property
+    def params(self) -> List[str]:
+        a = self.node.args
+        names = [p.arg for p in getattr(a, "posonlyargs", [])]
+        names += [p.arg for p in a.args]
+        return names
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"<FuncInfo {self.sf.modname}:{self.qualname}>"
+
+
+class Scope:
+    """Lexical scope for name → definition resolution (class scopes are
+    skipped on lookup, matching Python semantics)."""
+
+    def __init__(self, kind: str, parent: Optional["Scope"] = None):
+        self.kind = kind               # "module" | "class" | "function"
+        self.parent = parent
+        self.defs: Dict[str, FuncInfo] = {}
+        self.assigned_callables: Dict[str, "JitWrapper"] = {}
+
+    def lookup(self, name: str) -> Optional[FuncInfo]:
+        scope: Optional[Scope] = self
+        while scope is not None:
+            if scope.kind != "class" and name in scope.defs:
+                return scope.defs[name]
+            scope = scope.parent
+        return None
+
+    def lookup_wrapper(self, name: str) -> Optional["JitWrapper"]:
+        scope: Optional[Scope] = self
+        while scope is not None:
+            if scope.kind != "class" and name in scope.assigned_callables:
+                return scope.assigned_callables[name]
+            scope = scope.parent
+        return None
+
+
+@dataclass
+class JitWrapper:
+    """``name = jax.jit(fn, donate_argnums=...)`` — a wrapped callable
+    binding whose call sites follow jit semantics."""
+
+    target: Optional[FuncInfo]         # the wrapped def, when resolvable
+    static_names: Tuple[str, ...] = ()
+    static_nums: Tuple[int, ...] = ()
+    donate_nums: Tuple[int, ...] = ()
+    line: int = 0
+
+
+@dataclass
+class ModuleIndex:
+    sf: SourceFile
+    scope: Scope
+    # import alias -> full module name ("np" -> "numpy", "pl" -> "...pallas")
+    module_aliases: Dict[str, str] = field(default_factory=dict)
+    # from-imported symbol -> (module, symbol)
+    symbol_imports: Dict[str, Tuple[str, str]] = field(default_factory=dict)
+    classes: Dict[str, Dict[str, FuncInfo]] = field(default_factory=dict)
+    # every FuncInfo in the module, with its *enclosing* scope for lookups
+    functions: List[Tuple[FuncInfo, Scope]] = field(default_factory=list)
+
+
+@dataclass
+class CallGraph:
+    project: Project
+    modules: Dict[str, ModuleIndex] = field(default_factory=dict)
+    # traced function -> names of parameters carrying traced values
+    traced: Dict[FuncInfo, Set[str]] = field(default_factory=dict)
+    # jit wrappers with donate_argnums, keyed by (modname, binding name)
+    donors: Dict[Tuple[str, str], JitWrapper] = field(default_factory=dict)
+    # decorated defs that themselves donate (call sites use the def name)
+    donor_defs: Dict[FuncInfo, JitWrapper] = field(default_factory=dict)
+    # fn -> param indices that the fn jit-wraps or calls under jit
+    # (one-level higher-order: `_finish_executable(plan, body)` seeds `body`)
+    wrapper_params: Dict[FuncInfo, Set[int]] = field(default_factory=dict)
+
+    def module_for(self, sf: SourceFile) -> ModuleIndex:
+        return self.modules[sf.modname]
+
+    def is_traced(self, fn: FuncInfo) -> bool:
+        return fn in self.traced
+
+
+# ---------------------------------------------------------------------------
+# Name / attribute resolution helpers
+# ---------------------------------------------------------------------------
+
+def resolve_dotted(node: ast.AST, mi: ModuleIndex) -> Optional[str]:
+    """Best-effort dotted name for an expression like ``jax.numpy.sum``
+    or ``jnp.sum`` (aliases expanded), else None."""
+    parts: List[str] = []
+    cur = node
+    while isinstance(cur, ast.Attribute):
+        parts.append(cur.attr)
+        cur = cur.value
+    if isinstance(cur, ast.Name):
+        base = cur.id
+        full = mi.module_aliases.get(base)
+        if full is not None:
+            parts.append(full)
+        elif base in mi.symbol_imports:
+            mod, sym = mi.symbol_imports[base]
+            parts.append(f"{mod}.{sym}")
+        else:
+            parts.append(base)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _is_jax_jit(node: ast.AST, mi: ModuleIndex) -> bool:
+    dotted = resolve_dotted(node, mi)
+    return dotted in {"jax.jit", "jax.api.jit"}
+
+
+def _is_partial(node: ast.AST, mi: ModuleIndex) -> bool:
+    dotted = resolve_dotted(node, mi)
+    return dotted in {"functools.partial", "partial"}
+
+
+def _is_pallas_call(node: ast.AST, mi: ModuleIndex) -> bool:
+    dotted = resolve_dotted(node, mi)
+    return bool(dotted) and dotted.endswith("pallas_call")
+
+
+def _const_str_tuple(node: ast.AST) -> Tuple[str, ...]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for elt in node.elts:
+            if isinstance(elt, ast.Constant) and isinstance(elt.value, str):
+                out.append(elt.value)
+        return tuple(out)
+    return ()
+
+
+def _const_int_tuple(node: ast.AST) -> Tuple[int, ...]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for elt in node.elts:
+            if isinstance(elt, ast.Constant) and isinstance(elt.value, int):
+                out.append(elt.value)
+        return tuple(out)
+    return ()
+
+
+def _jit_kwargs(call: ast.Call) -> Tuple[Tuple[str, ...], Tuple[int, ...], Tuple[int, ...]]:
+    """(static_argnames, static_argnums, donate_argnums) from a jit call."""
+    static_names: Tuple[str, ...] = ()
+    static_nums: Tuple[int, ...] = ()
+    donate: Tuple[int, ...] = ()
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            static_names = _const_str_tuple(kw.value)
+        elif kw.arg == "static_argnums":
+            static_nums = _const_int_tuple(kw.value)
+        elif kw.arg == "donate_argnums":
+            donate = _const_int_tuple(kw.value)
+    return static_names, static_nums, donate
+
+
+# ---------------------------------------------------------------------------
+# Module indexing
+# ---------------------------------------------------------------------------
+
+class _Indexer(ast.NodeVisitor):
+    def __init__(self, mi: ModuleIndex):
+        self.mi = mi
+        self.scope_stack: List[Scope] = [mi.scope]
+        self.class_stack: List[str] = []
+
+    @property
+    def scope(self) -> Scope:
+        return self.scope_stack[-1]
+
+    def visit_Import(self, node: ast.Import) -> None:
+        for alias in node.names:
+            self.mi.module_aliases[alias.asname or alias.name.split(".")[0]] = (
+                alias.name if alias.asname else alias.name.split(".")[0]
+            )
+            if alias.asname:
+                self.mi.module_aliases[alias.asname] = alias.name
+
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        if node.module is None:
+            return
+        mod = node.module
+        if node.level:  # relative import: resolve against this module's package
+            pkg_parts = self.mi.sf.modname.split(".")[:-node.level]
+            mod = ".".join(pkg_parts + [node.module]) if pkg_parts else node.module
+        for alias in node.names:
+            local = alias.asname or alias.name
+            self.mi.symbol_imports[local] = (mod, alias.name)
+
+    def _visit_func(self, node) -> None:
+        info = FuncInfo(
+            node=node, sf=self.mi.sf,
+            qualname=".".join(self.class_stack + [node.name]) if self.class_stack
+            else node.name,
+            cls=self.class_stack[-1] if self.class_stack else None,
+        )
+        self.scope.defs[node.name] = info
+        self.mi.functions.append((info, self.scope))
+        if self.class_stack and len(self.scope_stack) >= 1 \
+                and self.scope.kind == "class":
+            self.mi.classes.setdefault(self.class_stack[-1], {})[node.name] = info
+        inner = Scope("function", parent=self.scope)
+        info.inner_scope = inner  # type: ignore[attr-defined]
+        self.scope_stack.append(inner)
+        for stmt in node.body:
+            self.visit(stmt)
+        self.scope_stack.pop()
+
+    visit_FunctionDef = _visit_func
+    visit_AsyncFunctionDef = _visit_func
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        self.mi.classes.setdefault(node.name, {})
+        cls_scope = Scope("class", parent=self.scope)
+        self.scope_stack.append(cls_scope)
+        self.class_stack.append(node.name)
+        for stmt in node.body:
+            self.visit(stmt)
+        self.class_stack.pop()
+        self.scope_stack.pop()
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        # name = jax.jit(fn, ...) / name = partial(jax.jit, ...)(..)? — the
+        # former is the pattern this repo uses (`_exclusive_sum`).
+        if isinstance(node.value, ast.Call):
+            self._maybe_wrapper(node.targets, node.value)
+        self.generic_visit(node)
+
+    def _maybe_wrapper(self, targets, call: ast.Call) -> None:
+        if not _is_jax_jit(call.func, self.mi):
+            return
+        target_fn: Optional[FuncInfo] = None
+        if call.args and isinstance(call.args[0], ast.Name):
+            target_fn = self.scope.lookup(call.args[0].id)
+            if target_fn is None and call.args[0].id in self.mi.symbol_imports:
+                pass  # cross-module wrap; resolved in the build pass
+        static_names, static_nums, donate = _jit_kwargs(call)
+        wrapper = JitWrapper(
+            target=target_fn, static_names=static_names,
+            static_nums=static_nums, donate_nums=donate, line=call.lineno,
+        )
+        for tgt in targets:
+            if isinstance(tgt, ast.Name):
+                self.scope.assigned_callables[tgt.id] = wrapper
+        # stash for the seed pass
+        self.mi.sf.tree.opslint_wrappers = getattr(  # type: ignore[attr-defined]
+            self.mi.sf.tree, "opslint_wrappers", [])
+        self.mi.sf.tree.opslint_wrappers.append((wrapper, call))  # type: ignore[attr-defined]
+
+
+def index_module(sf: SourceFile) -> ModuleIndex:
+    mi = ModuleIndex(sf=sf, scope=Scope("module"))
+    _Indexer(mi).visit(sf.tree)
+    return mi
+
+
+# ---------------------------------------------------------------------------
+# Seed discovery
+# ---------------------------------------------------------------------------
+
+def _decorator_seed(fn: FuncInfo, mi: ModuleIndex) -> Optional[JitWrapper]:
+    """jit/partial(jit, ...) decorator on *fn*, if any."""
+    for dec in fn.node.decorator_list:
+        if _is_jax_jit(dec, mi):
+            return JitWrapper(target=fn, line=dec.lineno)
+        if isinstance(dec, ast.Call):
+            if _is_jax_jit(dec.func, mi):
+                sn, si, dn = _jit_kwargs(dec)
+                return JitWrapper(target=fn, static_names=sn, static_nums=si,
+                                  donate_nums=dn, line=dec.lineno)
+            if _is_partial(dec.func, mi) and dec.args \
+                    and _is_jax_jit(dec.args[0], mi):
+                sn, si, dn = _jit_kwargs(dec)
+                return JitWrapper(target=fn, static_names=sn, static_nums=si,
+                                  donate_nums=dn, line=dec.lineno)
+    return None
+
+
+class _SeedScanner(ast.NodeVisitor):
+    """Finds jit()/pallas_call() *call sites* whose wrapped function is a
+    Name we can resolve — covers ``return jax.jit(body)`` and kernels."""
+
+    def __init__(self, mi: ModuleIndex, graph: "CallGraph"):
+        self.mi = mi
+        self.graph = graph
+        self.scope_stack: List[Scope] = [mi.scope]
+
+    def _visit_func(self, node) -> None:
+        for fn, scope in self.mi.functions:
+            if fn.node is node:
+                self.scope_stack.append(getattr(fn, "inner_scope", scope))
+                break
+        else:
+            self.scope_stack.append(self.scope_stack[-1])
+        self.generic_visit(node)
+        self.scope_stack.pop()
+
+    visit_FunctionDef = _visit_func
+    visit_AsyncFunctionDef = _visit_func
+
+    def visit_Call(self, node: ast.Call) -> None:
+        scope = self.scope_stack[-1]
+        fn: Optional[FuncInfo] = None
+        if _is_jax_jit(node.func, self.mi) and node.args \
+                and isinstance(node.args[0], ast.Name):
+            fn = scope.lookup(node.args[0].id)
+            if fn is not None:
+                sn, si, dn = _jit_kwargs(node)
+                _seed(self.graph, fn, static_names=sn, static_nums=si)
+        elif _is_pallas_call(node.func, self.mi) and node.args \
+                and isinstance(node.args[0], ast.Name):
+            fn = scope.lookup(node.args[0].id)
+            if fn is not None:
+                # every kernel ref-param is a traced buffer
+                _seed(self.graph, fn)
+        else:
+            # one-level higher-order: F(..., body, ...) where F jit-wraps
+            # that parameter seeds the local def passed in
+            callee = resolve_call(node, scope, self.mi, self.graph, None)
+            wraps = self.graph.wrapper_params.get(callee) if callee else None
+            if wraps:
+                params = callee.params
+                for idx in wraps:
+                    arg = None
+                    if idx < len(node.args):
+                        arg = node.args[idx]
+                    elif idx < len(params):
+                        for kw in node.keywords:
+                            if kw.arg == params[idx]:
+                                arg = kw.value
+                    if isinstance(arg, ast.Name):
+                        target = scope.lookup(arg.id)
+                        if target is not None:
+                            _seed(self.graph, target)
+        self.generic_visit(node)
+
+
+def _seed(graph: CallGraph, fn: FuncInfo,
+          static_names: Sequence[str] = (), static_nums: Sequence[int] = ()) -> None:
+    params = fn.params
+    tainted = set()
+    for i, name in enumerate(params):
+        if name in static_names or i in static_nums or name == "self":
+            continue
+        tainted.add(name)
+    prev = graph.traced.get(fn)
+    if prev is None or not tainted <= prev:
+        graph.traced[fn] = (prev or set()) | tainted
+        graph._dirty.append(fn)  # type: ignore[attr-defined]
+
+
+# ---------------------------------------------------------------------------
+# Taint analysis inside one function
+# ---------------------------------------------------------------------------
+
+class TaintResult:
+    def __init__(self, tainted_names: Set[str],
+                 calls: List[Tuple[ast.Call, Optional[FuncInfo], Set[int], Set[str]]]):
+        self.tainted_names = tainted_names
+        # (call node, resolved callee, tainted positional idxs, tainted kwarg names)
+        self.calls = calls
+
+
+def resolve_call(call: ast.Call, scope: Scope, mi: ModuleIndex,
+                 graph: CallGraph, cls: Optional[str]) -> Optional[FuncInfo]:
+    """Resolve a call's target to a project FuncInfo when possible."""
+    func = call.func
+    if isinstance(func, ast.Name):
+        fn = scope.lookup(func.id)
+        if fn is not None:
+            return fn
+        wrapper = scope.lookup_wrapper(func.id)
+        if wrapper is not None and wrapper.target is not None:
+            return wrapper.target
+        if func.id in mi.symbol_imports:
+            mod, sym = mi.symbol_imports[func.id]
+            other = graph.modules.get(mod)
+            if other is not None:
+                return other.scope.defs.get(sym)
+        return None
+    if isinstance(func, ast.Attribute):
+        base = func.value
+        if isinstance(base, ast.Name):
+            if base.id == "self" and cls is not None:
+                methods = mi.classes.get(cls, {})
+                return methods.get(func.attr)
+            target_mod = mi.module_aliases.get(base.id)
+            if target_mod is None and base.id in mi.symbol_imports:
+                mod, sym = mi.symbol_imports[base.id]
+                target_mod = f"{mod}.{sym}"
+            if target_mod is not None:
+                other = graph.modules.get(target_mod)
+                if other is not None:
+                    return other.scope.defs.get(func.attr)
+    return None
+
+
+def _namespace_is_traced(call: ast.Call, mi: ModuleIndex) -> bool:
+    dotted = resolve_dotted(call.func, mi)
+    if not dotted:
+        return False
+    head = dotted.rsplit(".", 1)[0]
+    return head in _TRACED_NAMESPACES or dotted.startswith("jax.numpy.") \
+        or dotted.startswith("jax.lax.")
+
+
+def analyze_taint(fn: FuncInfo, tainted_params: Set[str], scope: Scope,
+                  mi: ModuleIndex, graph: CallGraph) -> TaintResult:
+    """Flow-insensitive taint: a name ever assigned a traced value is
+    traced for the whole function (iterated to a small fixpoint)."""
+    tainted: Set[str] = set(tainted_params)
+    calls: List[Tuple[ast.Call, Optional[FuncInfo], Set[int], Set[str]]] = []
+
+    def expr_tainted(node: ast.AST) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in tainted
+        if isinstance(node, ast.Subscript):
+            return expr_tainted(node.value)
+        if isinstance(node, ast.Call):
+            func_name = node.func.id if isinstance(node.func, ast.Name) else None
+            if func_name in _HOST_COERCIONS:
+                return False
+            if _namespace_is_traced(node, mi):
+                return True
+            if isinstance(node.func, ast.Attribute) and expr_tainted(node.func.value):
+                return True  # method result of a traced object (x.astype, ...)
+            # a traced callee fed only static args returns a host value
+            # (resolve_interpret-style helpers) — taint needs tainted input
+            return any(expr_tainted(a) for a in node.args) or \
+                any(expr_tainted(kw.value) for kw in node.keywords)
+        if isinstance(node, (ast.BinOp,)):
+            return expr_tainted(node.left) or expr_tainted(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return expr_tainted(node.operand)
+        if isinstance(node, ast.BoolOp):
+            return any(expr_tainted(v) for v in node.values)
+        if isinstance(node, ast.Compare):
+            return expr_tainted(node.left) or \
+                any(expr_tainted(c) for c in node.comparators)
+        if isinstance(node, ast.IfExp):
+            return expr_tainted(node.body) or expr_tainted(node.orelse)
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return any(expr_tainted(e) for e in node.elts)
+        if isinstance(node, ast.Starred):
+            return expr_tainted(node.value)
+        if isinstance(node, ast.NamedExpr):
+            return expr_tainted(node.value)
+        # Attribute loads are deliberately NOT tainted: pytree aux data
+        # (A.nrows, schedule.row_buckets) is static under jit.
+        return False
+
+    def bind_targets(target: ast.AST) -> None:
+        if isinstance(target, ast.Name):
+            tainted.add(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                bind_targets(elt)
+        elif isinstance(target, ast.Starred):
+            bind_targets(target.value)
+
+    body_stmts = list(fn.node.body)
+    for _ in range(8):  # fixpoint over out-of-order assignments
+        before = len(tainted)
+        for node in ast.walk(fn.node):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node is not fn.node:
+                continue
+            if isinstance(node, ast.Assign) and expr_tainted(node.value):
+                for t in node.targets:
+                    bind_targets(t)
+            elif isinstance(node, ast.AnnAssign) and node.value is not None \
+                    and expr_tainted(node.value):
+                bind_targets(node.target)
+            elif isinstance(node, ast.AugAssign) and \
+                    (expr_tainted(node.value) or expr_tainted(node.target)):
+                bind_targets(node.target)
+            elif isinstance(node, ast.NamedExpr) and expr_tainted(node.value):
+                bind_targets(node.target)
+            elif isinstance(node, ast.For) and expr_tainted(node.iter):
+                bind_targets(node.target)
+            elif isinstance(node, ast.withitem) and node.optional_vars is not None \
+                    and expr_tainted(node.context_expr):
+                bind_targets(node.optional_vars)
+        if len(tainted) == before:
+            break
+
+    for node in ast.walk(fn.node):
+        if isinstance(node, ast.Call):
+            callee = resolve_call(node, scope, mi, graph, fn.cls)
+            t_pos = {i for i, a in enumerate(node.args) if expr_tainted(a)}
+            t_kw = {kw.arg for kw in node.keywords
+                    if kw.arg is not None and expr_tainted(kw.value)}
+            calls.append((node, callee, t_pos, t_kw))
+
+    return TaintResult(tainted, calls)
+
+
+# ---------------------------------------------------------------------------
+# Graph construction
+# ---------------------------------------------------------------------------
+
+def build_callgraph(project: Project) -> CallGraph:
+    graph = CallGraph(project=project)
+    graph._dirty = []  # type: ignore[attr-defined]
+
+    for sf in project.iter_files():
+        graph.modules[sf.modname] = index_module(sf)
+
+    # which params does each function jit-wrap (or call under a jitted
+    # nested def)?  Needed before the seed scan so cross-module call
+    # sites of e.g. `_finish_executable(plan, body)` can seed `body`.
+    for mi in graph.modules.values():
+        for fn, _scope in mi.functions:
+            idxs = _wrapper_param_indices(fn, mi)
+            if idxs:
+                graph.wrapper_params[fn] = idxs
+
+    # seeds: decorators, wrapper assignments, jit()/pallas_call() call sites
+    for mi in graph.modules.values():
+        for fn, scope in mi.functions:
+            wrapper = _decorator_seed(fn, mi)
+            if wrapper is not None:
+                _seed(graph, fn, static_names=wrapper.static_names,
+                      static_nums=wrapper.static_nums)
+                if wrapper.donate_nums:
+                    graph.donor_defs[fn] = wrapper
+        for wrapper, call in getattr(mi.sf.tree, "opslint_wrappers", []):
+            if wrapper.target is None and call.args \
+                    and isinstance(call.args[0], ast.Name) \
+                    and call.args[0].id in mi.symbol_imports:
+                mod, sym = mi.symbol_imports[call.args[0].id]
+                other = graph.modules.get(mod)
+                if other is not None:
+                    wrapper.target = other.scope.defs.get(sym)
+            if wrapper.target is not None:
+                _seed(graph, wrapper.target, static_names=wrapper.static_names,
+                      static_nums=wrapper.static_nums)
+        _SeedScanner(mi, graph).visit(mi.sf.tree)
+        # donation wrappers by binding name (module scope and nested)
+        for scope in _all_scopes(mi):
+            for name, wrapper in scope.assigned_callables.items():
+                if wrapper.donate_nums:
+                    graph.donors[(mi.sf.modname, name)] = wrapper
+
+    # propagate tracedness through resolvable calls, per-call-site taint
+    worklist = list(graph.traced.keys())
+    seen_rounds = 0
+    while worklist and seen_rounds < 10000:
+        seen_rounds += 1
+        fn = worklist.pop()
+        mi = graph.modules.get(fn.sf.modname)
+        if mi is None:
+            continue
+        scope = getattr(fn, "inner_scope", mi.scope)
+        taint = analyze_taint(fn, graph.traced.get(fn, set()), scope, mi, graph)
+        for call, callee, t_pos, t_kw in taint.calls:
+            if callee is None or callee is fn:
+                continue
+            if _is_wrapper_machinery(call, mi):
+                continue
+            params = callee.params
+            offset = 1 if params[:1] == ["self"] and _is_method_call(call) else 0
+            new_tainted = set()
+            for i in t_pos:
+                idx = i + offset
+                if idx < len(params):
+                    new_tainted.add(params[idx])
+            for kw in t_kw:
+                if kw in params:
+                    new_tainted.add(kw)
+            prev = graph.traced.get(callee)
+            if prev is None:
+                graph.traced[callee] = set(new_tainted)
+                worklist.append(callee)
+            elif not new_tainted <= prev:
+                prev |= new_tainted
+                worklist.append(callee)
+    return graph
+
+
+def _wrapper_param_indices(fn: FuncInfo, mi: ModuleIndex) -> Set[int]:
+    """Indices of *fn*'s parameters that it wraps in jax.jit (directly,
+    ``return jax.jit(body)``) or calls from inside a jit-decorated
+    nested def (``@jax.jit def run(...): return body(...)``)."""
+    params = fn.params
+    if not params:
+        return set()
+    idx_of = {name: i for i, name in enumerate(params)}
+    out: Set[int] = set()
+    jitted_nested: List[ast.AST] = []
+    for node in ast.walk(fn.node):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and node is not fn.node:
+            for dec in node.decorator_list:
+                if _is_jax_jit(dec, mi) or (
+                        isinstance(dec, ast.Call)
+                        and (_is_jax_jit(dec.func, mi)
+                             or (_is_partial(dec.func, mi) and dec.args
+                                 and _is_jax_jit(dec.args[0], mi)))):
+                    jitted_nested.append(node)
+                    break
+        elif isinstance(node, ast.Call) and _is_jax_jit(node.func, mi) \
+                and node.args and isinstance(node.args[0], ast.Name) \
+                and node.args[0].id in idx_of:
+            out.add(idx_of[node.args[0].id])
+    for nested in jitted_nested:
+        for node in ast.walk(nested):
+            if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+                    and node.func.id in idx_of:
+                out.add(idx_of[node.func.id])
+    return out
+
+
+def _is_method_call(call: ast.Call) -> bool:
+    return isinstance(call.func, ast.Attribute)
+
+
+def _is_wrapper_machinery(call: ast.Call, mi: ModuleIndex) -> bool:
+    """jit(fn) / pallas_call(kernel) sites already handled as seeds —
+    the Name argument there is a function reference, not a data arg."""
+    return _is_jax_jit(call.func, mi) or _is_pallas_call(call.func, mi) \
+        or _is_partial(call.func, mi)
+
+
+def _all_scopes(mi: ModuleIndex):
+    yield mi.scope
+    for fn, _ in mi.functions:
+        inner = getattr(fn, "inner_scope", None)
+        if inner is not None:
+            yield inner
+
+
+def function_scope(graph: CallGraph, fn: FuncInfo) -> Scope:
+    mi = graph.modules[fn.sf.modname]
+    return getattr(fn, "inner_scope", mi.scope)

@@ -1,0 +1,174 @@
+"""DON001 — donation discipline (the PR 7 arena-alias contract).
+
+A buffer passed in a ``donate_argnums`` position is consumed: XLA may
+alias its memory for the outputs, so any later read of the donated
+binding observes freed/overwritten storage.  In this repo donated
+buffers come out of the shared workspace ``Arena``, which makes a
+read-after-donation a cross-request data race, not just a local bug.
+
+The rule collects every donating callable —
+
+* defs decorated ``@partial(jax.jit, ..., donate_argnums=...)``
+  (``bin_rows_into`` donates its scratch), and
+* bindings assigned ``name = jax.jit(fn, donate_argnums=...)``
+  (``_exclusive_sum`` donates the nnz buffer) —
+
+then, at each call site, maps the donated argnums to argument
+expressions and flags any later load of that binding inside the same
+function, stopping at a rebind (``x = f(x)`` is the blessed pattern:
+the old binding dies at the call).  The path analysis is a linear
+source-order approximation, which is exactly how the engine's
+straight-line dispatch bodies read.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Tuple
+
+from .callgraph import CallGraph, FuncInfo, JitWrapper
+from .core import Finding, Project
+
+RULES = {
+    "DON001": "read of a donated binding after the donating call",
+}
+
+
+def run(project: Project, graph: CallGraph) -> List[Finding]:
+    findings: List[Finding] = []
+    for modname, mi in sorted(graph.modules.items()):
+        for fn, scope in mi.functions:
+            findings.extend(_check_function(fn, mi, graph))
+    return findings
+
+
+def _donor_for_call(call: ast.Call, mi, graph: CallGraph) -> Optional[JitWrapper]:
+    func = call.func
+    name = None
+    if isinstance(func, ast.Name):
+        name = func.id
+    elif isinstance(func, ast.Attribute) and isinstance(func.value, ast.Name):
+        # module-qualified call to a donating binding: mod._exclusive_sum(x)
+        target_mod = mi.module_aliases.get(func.value.id)
+        if target_mod is None and func.value.id in mi.symbol_imports:
+            m, s = mi.symbol_imports[func.value.id]
+            target_mod = f"{m}.{s}"
+        if target_mod is not None:
+            return graph.donors.get((target_mod, func.attr))
+        return None
+    if name is None:
+        return None
+    wrapper = graph.donors.get((mi.sf.modname, name))
+    if wrapper is not None:
+        return wrapper
+    # decorated donating defs, resolved through imports or local scope
+    if name in mi.symbol_imports:
+        mod, sym = mi.symbol_imports[name]
+        other = graph.modules.get(mod)
+        if other is not None:
+            target = other.scope.defs.get(sym)
+            if target is not None and target in graph.donor_defs:
+                return graph.donor_defs[target]
+        return None
+    for candidate, wrapper in graph.donor_defs.items():
+        if candidate.sf.modname == mi.sf.modname and candidate.name == name:
+            return wrapper
+    return None
+
+
+def _chain_str(node: ast.AST) -> Optional[str]:
+    """Dotted string for a Name or simple attribute chain
+    (``lease.i32`` -> "lease.i32"); None for anything more complex."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _donated_arg_names(call: ast.Call, wrapper: JitWrapper) -> List[str]:
+    """Bindings (names or simple attribute chains) in donated positions."""
+    params = wrapper.target.params if wrapper.target is not None else []
+    out = []
+    for pos in wrapper.donate_nums:
+        arg = None
+        if pos < len(call.args):
+            arg = call.args[pos]
+        elif pos < len(params):
+            pname = params[pos]
+            for kw in call.keywords:
+                if kw.arg == pname:
+                    arg = kw.value
+        if arg is not None:
+            chain = _chain_str(arg)
+            if chain is not None:
+                out.append(chain)
+    return out
+
+
+def _check_function(fn: FuncInfo, mi, graph: CallGraph) -> List[Finding]:
+    findings: List[Finding] = []
+    # gather (position, kind, name, node) events for every interesting name
+    donations: List[Tuple[Tuple[int, int], str, ast.Call]] = []
+    for node in ast.walk(fn.node):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and node is not fn.node:
+            continue
+        if isinstance(node, ast.Call):
+            wrapper = _donor_for_call(node, mi, graph)
+            if wrapper is None:
+                continue
+            for name in _donated_arg_names(node, wrapper):
+                donations.append(((node.lineno, node.col_offset), name, node))
+    if not donations:
+        return findings
+
+    loads: Dict[str, List[Tuple[Tuple[int, int], ast.AST]]] = {}
+    stores: Dict[str, List[Tuple[int, int]]] = {}
+    for node in ast.walk(fn.node):
+        if isinstance(node, ast.Name):
+            pos = (node.lineno, node.col_offset)
+            if isinstance(node.ctx, ast.Load):
+                loads.setdefault(node.id, []).append((pos, node))
+            else:  # Store / Del both kill the old binding
+                stores.setdefault(node.id, []).append(pos)
+        elif isinstance(node, ast.Attribute):
+            chain = _chain_str(node)
+            if chain is None or "." not in chain:
+                continue
+            pos = (node.lineno, node.col_offset)
+            if isinstance(node.ctx, ast.Load):
+                loads.setdefault(chain, []).append((pos, node))
+            else:
+                stores.setdefault(chain, []).append(pos)
+
+    for call_pos, name, call in donations:
+        # first rebind at/after the donating statement kills the binding
+        # (covers the `x = f(x)` idiom: the Assign target shares the call's
+        # line but sits at an earlier column, so compare by line only)
+        kill = min((p for p in stores.get(name, []) if p[0] >= call_pos[0]),
+                   default=None)
+        for pos, load in sorted(loads.get(name, [])):
+            if pos <= call_pos:
+                continue
+            if _inside(call, load):
+                continue  # the donating call's own argument
+            if kill is not None and pos > kill:
+                break
+            findings.append(Finding(
+                rule="DON001", path=fn.sf.relpath,
+                line=load.lineno, col=load.col_offset,
+                message=f"`{name}` is read after being donated at line "
+                        f"{call.lineno} (donate_argnums): the buffer may "
+                        "alias freed workspace memory",
+                hint="rebind the result over the donated name "
+                     f"(`{name} = ...`), or drop donation for this argument",
+            ))
+    return findings
+
+
+def _inside(outer: ast.AST, node: ast.AST) -> bool:
+    return any(child is node for child in ast.walk(outer))

@@ -1,0 +1,158 @@
+"""TRC — trace-safety rules for the jitted steady state.
+
+* ``TRC001``: a host sync inside a traced function.  ``.item()`` /
+  ``.block_until_ready()`` on traced values, ``np.asarray`` /
+  ``np.array`` materialization, ``jax.device_get``, and ``int()`` /
+  ``float()`` coercion of a traced value all force the accelerator
+  pipeline to drain — in the OpSparse steady state (zero-retrace
+  scheduled kernels, §5.4 alloc/exec overlap) that is the exact
+  stall class the engine exists to remove.
+* ``TRC002``: data-dependent Python branching inside a traced
+  function (``if``/``while``/ternary on a traced value) — under
+  ``jax.jit`` this either fails to trace or silently bakes one branch
+  into the executable.  Branching on ``static_argnames`` parameters
+  or closure-captured host config is fine and not flagged.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from .callgraph import (
+    CallGraph,
+    analyze_taint,
+    function_scope,
+    resolve_dotted,
+)
+from .core import Finding, Project
+
+RULES = {
+    "TRC001": "host sync inside a jit-traced function",
+    "TRC002": "data-dependent Python branch inside a jit-traced function",
+}
+
+_SYNC_ATTRS = {"block_until_ready"}
+_NP_MATERIALIZERS = {"asarray", "array"}
+_COERCIONS = {"int", "float"}
+
+
+def run(project: Project, graph: CallGraph) -> List[Finding]:
+    findings: List[Finding] = []
+    for fn, tainted_params in sorted(
+            graph.traced.items(), key=lambda kv: (kv[0].sf.relpath, kv[0].node.lineno)):
+        mi = graph.modules[fn.sf.modname]
+        scope = function_scope(graph, fn)
+        taint = analyze_taint(fn, tainted_params, scope, mi, graph)
+        tainted = taint.tainted_names
+
+        def expr_tainted(node: ast.AST) -> bool:
+            if isinstance(node, ast.Name):
+                return node.id in tainted
+            if isinstance(node, ast.Subscript):
+                return expr_tainted(node.value)
+            if isinstance(node, ast.Call):
+                if isinstance(node.func, ast.Attribute):
+                    if expr_tainted(node.func.value):
+                        return True
+                return any(expr_tainted(a) for a in node.args) or \
+                    any(expr_tainted(kw.value) for kw in node.keywords)
+            if isinstance(node, ast.BinOp):
+                return expr_tainted(node.left) or expr_tainted(node.right)
+            if isinstance(node, ast.UnaryOp):
+                return expr_tainted(node.operand)
+            if isinstance(node, ast.BoolOp):
+                return any(expr_tainted(v) for v in node.values)
+            if isinstance(node, ast.Compare):
+                # `x is None` / `x is not None` resolves structurally at
+                # trace time (None is never a tracer) — not data-dependent
+                if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops) \
+                        and all(isinstance(c, ast.Constant) and c.value is None
+                                for c in node.comparators):
+                    return False
+                return expr_tainted(node.left) or \
+                    any(expr_tainted(c) for c in node.comparators)
+            if isinstance(node, (ast.Tuple, ast.List)):
+                return any(expr_tainted(e) for e in node.elts)
+            if isinstance(node, ast.IfExp):
+                return expr_tainted(node.body) or expr_tainted(node.orelse)
+            return False
+
+        where = f"traced function `{fn.qualname}`"
+        for node in ast.walk(fn.node):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node is not fn.node:
+                # nested defs get their own traced entry if jit-wrapped
+                continue
+            if isinstance(node, ast.Call):
+                findings.extend(_check_call(node, fn, mi, where, expr_tainted))
+            elif isinstance(node, (ast.If, ast.While)):
+                if expr_tainted(node.test):
+                    findings.append(Finding(
+                        rule="TRC002", path=fn.sf.relpath,
+                        line=node.test.lineno, col=node.test.col_offset,
+                        message=f"data-dependent Python branch in {where}: "
+                                "the condition depends on a traced value",
+                        hint="use jnp.where / lax.cond / lax.select, or mark "
+                             "the driving argument static (static_argnames) "
+                             "if it is host config",
+                    ))
+            elif isinstance(node, ast.IfExp):
+                if expr_tainted(node.test):
+                    findings.append(Finding(
+                        rule="TRC002", path=fn.sf.relpath,
+                        line=node.test.lineno, col=node.test.col_offset,
+                        message=f"data-dependent ternary in {where}: the "
+                                "condition depends on a traced value",
+                        hint="use jnp.where on the traced condition",
+                    ))
+    return findings
+
+
+def _check_call(node: ast.Call, fn, mi, where: str, expr_tainted) -> List[Finding]:
+    out: List[Finding] = []
+    func = node.func
+    loc = dict(path=fn.sf.relpath, line=node.lineno, col=node.col_offset)
+
+    if isinstance(func, ast.Attribute):
+        if func.attr == "item" and not node.args and expr_tainted(func.value):
+            out.append(Finding(
+                rule="TRC001", message=f".item() host sync in {where}",
+                hint="keep the value on-device (jnp scalar); fetch it once "
+                     "outside the jit boundary if the host truly needs it",
+                **loc))
+        elif func.attr in _SYNC_ATTRS:
+            out.append(Finding(
+                rule="TRC001",
+                message=f".{func.attr}() host sync in {where}",
+                hint="synchronize outside the traced region (e.g. at the "
+                     "finalize/verify boundary that already host-syncs)",
+                **loc))
+        else:
+            dotted = resolve_dotted(func, mi)
+            if dotted in {"jax.device_get"}:
+                out.append(Finding(
+                    rule="TRC001",
+                    message=f"jax.device_get in {where} forces a device->host "
+                            "copy under trace",
+                    hint="return the array from the jitted function and fetch "
+                         "it at the caller",
+                    **loc))
+            elif dotted is not None and dotted.startswith("numpy.") \
+                    and dotted.split(".")[-1] in _NP_MATERIALIZERS:
+                out.append(Finding(
+                    rule="TRC001",
+                    message=f"{dotted.replace('numpy', 'np')}() in {where} "
+                            "materializes a traced value on the host",
+                    hint="use jnp equivalents inside traced code; np.* belongs "
+                         "on the cold/host planning path only",
+                    **loc))
+    elif isinstance(func, ast.Name) and func.id in _COERCIONS:
+        if any(expr_tainted(a) for a in node.args):
+            out.append(Finding(
+                rule="TRC001",
+                message=f"{func.id}() coerces a traced value to host in {where}",
+                hint="keep device scalars as 0-d jnp arrays under trace; "
+                     "widen/coerce on the host after the jit call returns",
+                **loc))
+    return out

@@ -198,13 +198,13 @@ class Arena:
         # site's visit counter advances twice per acquisition.)
         self.faults = faults
         self._lock = threading.Lock()
-        self._free: Dict[Tuple[str, int], List[jax.Array]] = {}
-        self.bytes_in_use = 0
-        self.bytes_free = 0
-        self.peak_bytes = 0
-        self.lease_hits = 0
-        self.lease_misses = 0
-        self.pressure_events = 0
+        self._free: Dict[Tuple[str, int], List[jax.Array]] = {}  # guarded-by: _lock
+        self.bytes_in_use = 0       # guarded-by: _lock
+        self.bytes_free = 0         # guarded-by: _lock
+        self.peak_bytes = 0         # guarded-by: _lock
+        self.lease_hits = 0         # guarded-by: _lock
+        self.lease_misses = 0       # guarded-by: _lock
+        self.pressure_events = 0    # guarded-by: _lock
 
     # -- introspection ------------------------------------------------------
     @property

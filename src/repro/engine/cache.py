@@ -72,9 +72,9 @@ class PlanCache:
         assert capacity >= 1
         self.capacity = capacity
         self.arena = arena
-        self.hits = 0
-        self.misses = 0
-        self.evictions = 0
+        self.hits = 0        # guarded-by: _lock
+        self.misses = 0      # guarded-by: _lock
+        self.evictions = 0   # guarded-by: _lock
         # Lifecycle events (insert/evict/specialize/load) go to the
         # engine's telemetry ring buffer; the shared NULL handle makes a
         # bare PlanCache() emit-free without branching at call sites.
@@ -82,7 +82,7 @@ class PlanCache:
                           else telemetry_mod.NULL)
         self._lock = threading.Lock()
         self._stamp = itertools.count(1)
-        self._entries: "OrderedDict[PlanKey, CacheEntry]" = OrderedDict()
+        self._entries: "OrderedDict[PlanKey, CacheEntry]" = OrderedDict()  # guarded-by: _lock
 
     # -- lookup ------------------------------------------------------------
     def get(self, key: PlanKey) -> Optional[CacheEntry]:

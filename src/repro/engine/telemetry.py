@@ -124,7 +124,7 @@ class MetricsRegistry:
 
     def __init__(self):
         self._lock = threading.Lock()
-        self._metrics: "Dict[str, object]" = {}
+        self._metrics: "Dict[str, object]" = {}  # guarded-by: _lock
 
     def _get_or_create(self, name: str, factory):
         with self._lock:
@@ -357,9 +357,9 @@ class EventLog:
 
     def __init__(self, capacity: int = 4096):
         self.capacity = max(1, int(capacity))
-        self.appended = 0
+        self.appended = 0  # guarded-by: _lock
         self._lock = threading.Lock()
-        self._buf: deque = deque(maxlen=self.capacity)
+        self._buf: deque = deque(maxlen=self.capacity)  # guarded-by: _lock
 
     def append(self, item) -> None:
         """Append a record: a dict, or a closed :class:`Span` (kept as-is

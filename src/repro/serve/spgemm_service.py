@@ -129,7 +129,7 @@ class _Tenant:
         # Cold-call cost model: EWMA of observed seconds per flop,
         # calibrated after every cold (unspecialized-plan) call.  None
         # until the first cold call completes.
-        self.cold_s_per_flop: Optional[float] = None
+        self.cold_s_per_flop: Optional[float] = None  # guarded-by: lock
         reg = engine.telemetry.registry
         self.c_requests = reg.counter("opsparse_service_requests_total")
         self.c_retries = reg.counter("opsparse_service_retries_total")
@@ -187,9 +187,9 @@ class SpgemmService:
         self.backoff_jitter = float(backoff_jitter)
         self.deadline_quantile = float(deadline_quantile)
         self.telemetry_enabled = bool(telemetry)
-        self._rng = random.Random(seed)
+        self._rng = random.Random(seed)  # guarded-by: _lock
         self._lock = threading.Lock()
-        self._tenants: "Dict[str, _Tenant]" = {}
+        self._tenants: "Dict[str, _Tenant]" = {}  # guarded-by: _lock
         # Service-wide registry: cross-tenant counters that have no
         # tenant label (admission rejections name tenants that were
         # never admitted, so they cannot live in a tenant registry).
@@ -197,7 +197,7 @@ class SpgemmService:
         self._g_tenants = self.registry.gauge("opsparse_service_tenants")
         self._c_admission_rejected = self.registry.counter(
             "opsparse_service_admission_rejected_total")
-        self._http: Optional[MetricsHTTPServer] = None
+        self._http: Optional[MetricsHTTPServer] = None  # guarded-by: _lock
 
     # -- tenancy ------------------------------------------------------------
     def _get_tenant(self, name: str) -> Optional[_Tenant]:
@@ -456,15 +456,21 @@ class SpgemmService:
 
     def serve_http(self, host: str = "127.0.0.1",
                    port: int = 0) -> "MetricsHTTPServer":
-        """Start (or return the already-running) metrics endpoint."""
-        if self._http is None:
-            self._http = MetricsHTTPServer(self, host=host, port=port)
-        return self._http
+        """Start (or return the already-running) metrics endpoint.
+
+        The check-then-create runs under ``_lock``: two threads racing
+        here used to each start a listener and leak one (opslint LCK002).
+        """
+        with self._lock:
+            if self._http is None:
+                self._http = MetricsHTTPServer(self, host=host, port=port)
+            return self._http
 
     def close(self) -> None:
-        if self._http is not None:
-            self._http.close()
-            self._http = None
+        with self._lock:
+            http, self._http = self._http, None
+        if http is not None:
+            http.close()  # join the server thread outside the lock
 
 
 class ServiceSession:

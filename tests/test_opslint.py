@@ -1,0 +1,516 @@
+"""opslint (repro.analysis_static) — rule fixtures + baseline regression.
+
+Each rule family gets a bad fixture (must flag), a clean fixture (must
+stay silent), and a suppressed fixture (`# opslint: disable=...`).
+Fixtures are plain text analyzed by AST — nothing here executes JAX.
+The final test pins the shipped ``opslint_baseline.json`` to a fresh
+run over ``src/repro`` so the CI gate can never drift silently.
+"""
+
+import json
+import textwrap
+from pathlib import Path
+
+from repro.analysis_static import (
+    diff_against_baseline,
+    load_baseline,
+    run_paths,
+)
+from repro.analysis_static.__main__ import main as opslint_main
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+
+def lint(tmp_path, source, name="fixture.py", rules=None):
+    (tmp_path / name).write_text(textwrap.dedent(source), encoding="utf-8")
+    return run_paths([str(tmp_path)], root=str(tmp_path), rules=rules)
+
+
+def rules_of(findings):
+    return sorted({f.rule for f in findings})
+
+
+# ---------------------------------------------------------------------------
+# TRC — trace-safety
+# ---------------------------------------------------------------------------
+
+TRC_BAD = """
+    import jax
+    import numpy as np
+
+    @jax.jit
+    def bad(x):
+        if x > 0:
+            x = x + 1
+        host = np.asarray(x)
+        return int(x) + host.shape[0]
+"""
+
+TRC_CLEAN = """
+    from functools import partial
+    import jax
+    import jax.numpy as jnp
+
+    @partial(jax.jit, static_argnames=("m",))
+    def good(x, m):
+        if m:
+            x = x + 1
+        vals = None
+        vals = vals if vals is None else vals
+        return jnp.where(x > 0, x, 0)
+
+    def host_only(x):
+        return int(x)
+"""
+
+TRC_SUPPRESSED = """
+    import jax
+
+    @jax.jit
+    def tolerated(x):
+        if x > 0:  # opslint: disable=TRC002 -- trace-time constant in tests
+            x = x + 1
+        return x
+"""
+
+
+def test_trc_flags_host_sync_and_branch(tmp_path):
+    findings = lint(tmp_path, TRC_BAD)
+    assert "TRC001" in rules_of(findings)
+    assert "TRC002" in rules_of(findings)
+    # int(x) and np.asarray(x) are two separate syncs
+    assert sum(f.rule == "TRC001" for f in findings) == 2
+
+
+def test_trc_clean_static_branch_and_host_code(tmp_path):
+    findings = lint(tmp_path, TRC_CLEAN)
+    assert rules_of(findings) == []
+
+
+def test_trc_suppressed_inline(tmp_path):
+    findings = lint(tmp_path, TRC_SUPPRESSED)
+    assert rules_of(findings) == []
+
+
+def test_trc_propagates_through_call_graph(tmp_path):
+    findings = lint(tmp_path, """
+        import jax
+
+        def helper(y):
+            if y > 0:
+                return y
+            return -y
+
+        @jax.jit
+        def entry(x):
+            return helper(x)
+    """)
+    assert [f.rule for f in findings] == ["TRC002"]
+
+
+def test_trc_static_args_do_not_taint_callees(tmp_path):
+    # schedule tuples threaded through a traced driver stay static
+    findings = lint(tmp_path, """
+        import jax
+        import jax.numpy as jnp
+
+        def driver(x, buckets):
+            for cap in buckets:
+                if not cap:
+                    continue
+                x = x + cap
+            return x
+
+        @jax.jit
+        def entry(x):
+            return driver(x, (8, 16))
+    """)
+    assert rules_of(findings) == []
+
+
+# ---------------------------------------------------------------------------
+# DON — donation discipline
+# ---------------------------------------------------------------------------
+
+DON_BAD = """
+    import jax
+
+    def f(buf):
+        return buf * 2
+
+    g = jax.jit(f, donate_argnums=0)
+
+    def use(buf):
+        out = g(buf)
+        return buf + out
+"""
+
+DON_CLEAN = """
+    import jax
+
+    def f(buf):
+        return buf * 2
+
+    g = jax.jit(f, donate_argnums=0)
+
+    def use(buf):
+        buf = g(buf)
+        return buf
+"""
+
+DON_SUPPRESSED = """
+    import jax
+
+    def f(buf):
+        return buf * 2
+
+    g = jax.jit(f, donate_argnums=0)
+
+    def use(buf):
+        out = g(buf)
+        return buf + out  # opslint: disable=DON001 -- interpret-mode test
+"""
+
+
+def test_don_flags_read_after_donation(tmp_path):
+    findings = lint(tmp_path, DON_BAD)
+    assert [f.rule for f in findings] == ["DON001"]
+    assert "donated at line" in findings[0].message
+
+
+def test_don_clean_rebind_idiom(tmp_path):
+    assert lint(tmp_path, DON_CLEAN) == []
+
+
+def test_don_suppressed_inline(tmp_path):
+    assert lint(tmp_path, DON_SUPPRESSED) == []
+
+
+def test_don_decorated_def_and_attribute_chain(tmp_path):
+    findings = lint(tmp_path, """
+        from functools import partial
+        import jax
+
+        @partial(jax.jit, donate_argnums=(1,))
+        def fill(sizes, buf):
+            return buf.at[0].set(sizes)
+
+        def use(lease, sizes):
+            out = fill(sizes, lease.i32)
+            return lease.i32 + out
+    """)
+    assert [f.rule for f in findings] == ["DON001"]
+    assert "`lease.i32`" in findings[0].message
+
+
+# ---------------------------------------------------------------------------
+# LCK — lock order / guarded fields
+# ---------------------------------------------------------------------------
+
+LCK_BAD = """
+    import threading
+
+    class Box:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.count = 0  # guarded-by: _lock
+
+        def bump(self):
+            self.count += 1
+"""
+
+LCK_CLEAN = """
+    import threading
+
+    class Box:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.count = 0  # guarded-by: _lock
+
+        def bump(self):
+            with self._lock:
+                self.count += 1
+
+        def _bump_locked(self):
+            self.count += 1
+"""
+
+LCK_SUPPRESSED = """
+    import threading
+
+    class Box:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.count = 0  # guarded-by: _lock
+
+        def bump_unsafe(self):
+            self.count += 1  # opslint: disable=LCK002 -- single-thread path
+"""
+
+LCK_CYCLE = """
+    import threading
+
+    class Alpha:
+        def __init__(self, other: "Beta" = None):
+            self._lock = threading.Lock()
+            self.other = other
+
+        def poke(self):
+            with self._lock:
+                self.other.poke()
+
+    class Beta:
+        def __init__(self, other: "Alpha" = None):
+            self._lock = threading.Lock()
+            self.other = other
+
+        def poke(self):
+            with self._lock:
+                self.other.poke()
+"""
+
+LCK_ORDERED = """
+    import threading
+
+    class Alpha:
+        def __init__(self, other: "Beta" = None):
+            self._lock = threading.Lock()
+            self.other = other
+
+        def poke(self):
+            with self._lock:
+                self.other.poke()
+
+    class Beta:
+        def __init__(self):
+            self._lock = threading.Lock()
+
+        def poke(self):
+            with self._lock:
+                pass
+"""
+
+
+def test_lck_flags_unlocked_guarded_write(tmp_path):
+    findings = lint(tmp_path, LCK_BAD)
+    assert [f.rule for f in findings] == ["LCK002"]
+    assert "guarded-by: _lock" in findings[0].message
+
+
+def test_lck_clean_with_lock_and_locked_convention(tmp_path):
+    assert lint(tmp_path, LCK_CLEAN) == []
+
+
+def test_lck_suppressed_inline(tmp_path):
+    assert lint(tmp_path, LCK_SUPPRESSED) == []
+
+
+def test_lck_detects_lock_order_cycle(tmp_path):
+    findings = lint(tmp_path, LCK_CYCLE)
+    assert [f.rule for f in findings] == ["LCK001"]
+    assert "Alpha._lock" in findings[0].message
+    assert "Beta._lock" in findings[0].message
+
+
+def test_lck_one_directional_nesting_is_clean(tmp_path):
+    assert lint(tmp_path, LCK_ORDERED) == []
+
+
+def test_lck_mutator_call_counts_as_write(tmp_path):
+    findings = lint(tmp_path, """
+        import threading
+
+        class Roster:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._members = []  # guarded-by: _lock
+
+            def add(self, m):
+                self._members.append(m)
+    """)
+    assert [f.rule for f in findings] == ["LCK002"]
+
+
+# ---------------------------------------------------------------------------
+# INT — host-int width
+# ---------------------------------------------------------------------------
+
+INT_BAD = """
+    import jax
+
+    def tally(x):
+        fetched = jax.device_get(x)
+        total_bytes = 0
+        total_bytes += fetched[0] * 8
+        return total_bytes
+"""
+
+INT_CLEAN = """
+    import jax
+
+    def tally(x):
+        fetched = jax.device_get(x)
+        total_bytes = 0
+        total_bytes += int(fetched[0]) * 8
+        return total_bytes
+"""
+
+INT_SUPPRESSED = """
+    import jax
+
+    def tally(x):
+        fetched = jax.device_get(x)
+        total_bytes = 0
+        total_bytes += fetched[0] * 8  # opslint: disable=INT001 -- tiny fixture counts
+        return total_bytes
+"""
+
+
+def test_int_flags_unwidened_accumulator(tmp_path):
+    findings = lint(tmp_path, INT_BAD)
+    assert [f.rule for f in findings] == ["INT001"]
+    assert "total_bytes" in findings[0].message
+
+
+def test_int_clean_when_widened_at_fetch(tmp_path):
+    assert lint(tmp_path, INT_CLEAN) == []
+
+
+def test_int_suppressed_inline(tmp_path):
+    assert lint(tmp_path, INT_SUPPRESSED) == []
+
+
+# ---------------------------------------------------------------------------
+# KRN — kernel budgets
+# ---------------------------------------------------------------------------
+
+KRN_BAD = """
+    BAD_TABLE_SIZES = (16, 24)
+    FOO_ENTRIES = 192
+"""
+
+KRN_CLEAN = """
+    GOOD_TABLE_SIZES = (16, 32)
+    PACK_TILE_ENTRIES = 8 * 128
+    lowercase_sizes = (3, 5)
+"""
+
+KRN_SUPPRESSED = """
+    # opslint: disable=KRN001 -- deliberately shaved sizes (paper Table 2)
+    BAD_TABLE_SIZES = (15, 31)
+    BIG_ENTRIES = 128 * 1024  # opslint: disable=KRN002 -- HBM-resident table
+"""
+
+
+def test_krn_flags_non_pow2_and_lane_misaligned(tmp_path):
+    findings = lint(tmp_path, KRN_BAD)
+    assert rules_of(findings) == ["KRN001", "KRN002"]
+
+
+def test_krn_clean_constants_with_folding(tmp_path):
+    assert lint(tmp_path, KRN_CLEAN) == []
+
+
+def test_krn_suppressed_inline(tmp_path):
+    assert lint(tmp_path, KRN_SUPPRESSED) == []
+
+
+def test_krn_flags_over_budget_entries(tmp_path):
+    findings = lint(tmp_path, "HUGE_ENTRIES = 128 * 1024\n")
+    assert [f.rule for f in findings] == ["KRN002"]
+    assert "VMEM" in findings[0].message
+
+
+# ---------------------------------------------------------------------------
+# engine: baseline diffing + CLI
+# ---------------------------------------------------------------------------
+
+LCK_BAD_TWICE = LCK_BAD + """
+        def bump_again(self):
+            self.count += 1
+"""
+
+
+def test_fail_on_new_diffs_against_baseline(tmp_path, capsys):
+    fixture = tmp_path / "mod.py"
+    fixture.write_text(textwrap.dedent(LCK_BAD), encoding="utf-8")
+    baseline = tmp_path / "base.json"
+
+    # write a baseline containing the finding -> gate passes
+    rc = opslint_main([str(fixture), "--root", str(tmp_path),
+                       "--write-baseline", str(baseline)])
+    assert rc == 0
+    rc = opslint_main([str(fixture), "--root", str(tmp_path),
+                       "--fail-on-new", "--baseline", str(baseline)])
+    assert rc == 0
+
+    # a NEW finding (second unlocked write) must fail the gate
+    fixture.write_text(textwrap.dedent(LCK_BAD_TWICE), encoding="utf-8")
+    rc = opslint_main([str(fixture), "--root", str(tmp_path),
+                       "--fail-on-new", "--baseline", str(baseline)])
+    assert rc == 1
+    out = capsys.readouterr().out
+    assert "1 new" in out
+
+
+def test_json_format_is_machine_readable(tmp_path, capsys):
+    fixture = tmp_path / "mod.py"
+    fixture.write_text(textwrap.dedent(INT_BAD), encoding="utf-8")
+    rc = opslint_main([str(fixture), "--root", str(tmp_path),
+                       "--format", "json"])
+    assert rc == 1
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["count"] == 1
+    (finding,) = payload["findings"]
+    assert finding["rule"] == "INT001"
+    assert finding["line"] > 0 and finding["hint"]
+
+
+def test_rule_selection(tmp_path):
+    findings = lint(tmp_path, TRC_BAD, rules=["TRC002"])
+    assert rules_of(findings) == ["TRC002"]
+
+
+def test_diff_against_baseline_reports_fixed(tmp_path):
+    findings = lint(tmp_path, LCK_BAD)
+    assert len(findings) == 1
+    stale = findings + [findings[0].__class__(
+        rule="LCK002", path="gone.py", line=9, col=0,
+        message="no longer reproduces")]
+    new, fixed = diff_against_baseline(findings, stale)
+    assert new == []
+    assert [f.path for f in fixed] == ["gone.py"]
+
+
+# ---------------------------------------------------------------------------
+# regression: the shipped baseline matches a fresh run over src/repro
+# ---------------------------------------------------------------------------
+
+def test_shipped_baseline_matches_fresh_run():
+    findings = run_paths([str(REPO_ROOT / "src" / "repro")],
+                         root=str(REPO_ROOT))
+    baseline = load_baseline(REPO_ROOT / "opslint_baseline.json")
+    new, fixed = diff_against_baseline(findings, baseline)
+    assert new == [], (
+        "opslint found NEW findings vs the checked-in baseline — fix them "
+        "or (for documented false positives) suppress inline:\n"
+        + "\n".join(f.format_text() for f in new))
+    assert fixed == [], (
+        "baseline entries no longer reproduce — refresh "
+        "opslint_baseline.json with scripts/opslint --write-baseline")
+
+
+def test_guarded_by_ground_truth_is_present():
+    """The PR's annotation satellite: the four lock-holding subsystems
+    carry guarded-by annotations (ground truth for LCK002)."""
+    expectations = {
+        "src/repro/core/workspace.py": "bytes_in_use",
+        "src/repro/engine/cache.py": "_entries",
+        "src/repro/engine/telemetry.py": "_metrics",
+        "src/repro/serve/spgemm_service.py": "_http",
+    }
+    for rel, field in expectations.items():
+        text = (REPO_ROOT / rel).read_text(encoding="utf-8")
+        guarded = [ln for ln in text.splitlines()
+                   if "guarded-by:" in ln and field in ln]
+        assert guarded, f"{rel}: expected a guarded-by annotation on {field}"
